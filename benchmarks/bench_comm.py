@@ -1,0 +1,64 @@
+"""Paper Fig. 12: communication cost of the distributed entity partitioning.
+
+Measures the ring-pass (ppermute) wall time on 8 host devices in a
+subprocess (BSP supersteps, paper Sec. 6.3) and reports the analytic wire
+model: (|p|-1) * |D| elements total, |D| - |D|/|p| sent per node.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import record
+from repro.core.distributed import ring_comm_elements
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, time
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((8,), ("data",))
+    n, dims = int(sys.argv[2]), int(sys.argv[3])
+    x = jnp.zeros((n, dims), jnp.float32)
+    x = jax.device_put(x, NamedSharding(mesh, P("data")))
+    perm = [(j, (j + 1) % 8) for j in range(8)]
+
+    def ring(v):
+        def body(_, e):
+            return jax.lax.ppermute(e, "data", perm)
+        return jax.lax.fori_loop(0, 7, body, v)
+
+    f = jax.jit(jax.shard_map(ring, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    f(x).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        f(x).block_until_ready()
+    print("RING_US", (time.perf_counter() - t0) / 3 * 1e6)
+    """
+)
+
+
+def run():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    for name, n, dims in [("Syn16D2M", 40_000, 16), ("SuSy", 40_000, 18)]:
+        out = subprocess.run(
+            [sys.executable, "-c", SCRIPT, src, str(n), str(dims)],
+            capture_output=True, text=True, timeout=600,
+            env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+        )
+        us = float(out.stdout.split("RING_US")[-1].strip().split()[0])
+        elems = ring_comm_elements(n, 8)
+        record(
+            f"fig12/{name}/p=8", us,
+            f"total_elements={elems};bytes={elems * dims * 4};"
+            f"per_node_sent={n - n // 8}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 6: response time vs indexed dimensions k, REORDER on/off.
+
+Uses the SuSy profile (moderate variance spread) and the Songs profile
+(first ~12 dims low-variance -- the case where REORDER matters most).
+"""
+from __future__ import annotations
+
+from benchmarks.common import record, timeit
+from repro.core import SelfJoinConfig, self_join
+from repro.data import paper_dataset
+
+KS = [1, 2, 3, 4, 6, 8]
+
+
+def run():
+    for name, scale, eps in [("SuSy", 0.0012, 0.02), ("Songs", 0.008, 0.01)]:
+        d = paper_dataset(name, scale)
+        for k in KS:
+            for reorder in (True, False):
+                cfg = SelfJoinConfig(eps=eps, k=k, reorder=reorder,
+                                     sortidu=True, shortc=False,
+                                     tile_size=32, dim_block=16)
+                r = self_join(d, cfg)        # warmup: XLA compiles here
+                t = timeit(lambda: self_join(d, cfg))
+                st = r.stats
+                record(
+                    f"fig6/{name}/k={k}/reorder={'on' if reorder else 'off'}",
+                    t,
+                    f"candidates={st.num_candidates};cells={st.num_nonempty_cells}",
+                )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Paper Fig. 7 / Sec. 5.6: the memory-operation model used to select k.
+
+search ops  = |D| * 3^k * log2(|G|);  compare ops = mu / f  (sampled).
+"""
+from __future__ import annotations
+
+from benchmarks.common import record
+from repro.core.tuning import estimate_k_costs, select_k
+from repro.data import paper_dataset
+
+
+def run():
+    d = paper_dataset("Syn16D2M", 0.004)
+    ests = estimate_k_costs(d, eps=0.05, ks=[1, 2, 4, 6, 8, 10, 12])
+    for e in ests:
+        record(
+            f"fig7/Syn16D2M/k={e.k}", 0.0,
+            f"search_ops={e.search_ops:.3e};compare_ops={e.compare_ops:.3e};"
+            f"total={e.total_ops:.3e};cells={e.num_cells}",
+        )
+    k = select_k(d, 0.05, ks=[1, 2, 4, 6, 8, 10, 12])
+    record("fig7/Syn16D2M/selected_k", 0.0, f"k={k}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Fig. 10: computation time histogram of entity-partitioned batches.
+
+Partitions the query set into N_b batches and times each batch's join
+against the full dataset; near-equal batch times (small max/min spread) are
+what make round-robin assignment near-ideal (paper Sec. 6.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import SelfJoinConfig, make_partition
+from repro.core.grid import adjacent_cell_pairs, build_grid, build_tile_plan
+from repro.core.reorder import variance_reorder
+from repro.kernels import ops
+from repro.data import paper_dataset
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "partition_times.json")
+
+
+def batch_times(d, eps, k, n_batches, tile_size=32, dim_block=32):
+    work, _ = variance_reorder(d)
+    grid = build_grid(work, eps, k)
+    plan = build_tile_plan(grid, tile_size, sortidu=True)
+    tiles, tlen = ops.make_tiles(
+        grid.pts_sorted, plan.tile_start, plan.tile_len, tile_size, dim_block
+    )
+    part = make_partition(plan.num_pairs, 1, n_batches)
+    times = []
+    for b in range(part.num_batches):
+        lo, hi = part.query_range(b)
+        t0 = time.perf_counter()
+        ops.tile_counts(
+            tiles, tlen, plan.pair_a[lo:hi], plan.pair_b[lo:hi],
+            eps=eps, dim_block=dim_block, shortc=True,
+        )
+        times.append(time.perf_counter() - t0)
+    return np.asarray(times)
+
+
+def run():
+    results = {}
+    for name, scale, eps, nb in [("Syn16D2M", 0.002, 0.05, 32), ("SuSy", 0.0008, 0.02, 32)]:
+        d = paper_dataset(name, scale)
+        times = batch_times(d, eps, 6, nb)
+        results[name] = times.tolist()
+        record(
+            f"fig10/{name}/Nb={nb}", float(times.sum() * 1e6),
+            f"min={times.min():.3f}s;max={times.max():.3f}s;"
+            f"rel_spread={(times.max() - times.min()) / times.mean():.3f}",
+        )
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(results, f)
+
+
+if __name__ == "__main__":
+    run()

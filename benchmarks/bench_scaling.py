@@ -1,0 +1,35 @@
+"""Paper Fig. 11: simulated multi-GPU scaling from measured batch times.
+
+Round-robin assignment of the measured per-batch times (bench_partition_
+balance writes them) to |p| workers; speedup vs |p|=1.  The paper reports
+near-ideal scaling up to 128 -- entity partitioning makes batch costs
+near-equal, so max-load ~ total/|p|.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import simulate_scaling
+from benchmarks.bench_partition_balance import OUT as TIMES_FILE, run as _gen
+
+
+def run():
+    if not os.path.exists(TIMES_FILE):
+        _gen()
+    with open(TIMES_FILE) as f:
+        data = json.load(f)
+    for name, times in data.items():
+        rows = simulate_scaling(np.asarray(times), [1, 2, 4, 8, 16, 32])
+        for p, t, speedup in rows:
+            record(
+                f"fig11/{name}/p={p}", t * 1e6,
+                f"speedup={speedup:.2f};ideal={p};efficiency={speedup / p:.3f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

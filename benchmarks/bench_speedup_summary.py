@@ -1,0 +1,40 @@
+"""Paper Table 3: GPU-Join (all optimizations) speedup over the EGO-class
+baseline, at the smallest and largest eps per dataset."""
+from __future__ import annotations
+
+from benchmarks.common import record, timeit
+from repro.core import SelfJoinConfig, select_k, self_join
+from repro.core.ego import ego_join_counts
+from repro.data import paper_dataset
+
+CASES = [
+    ("ColorHist", 0.05, [0.05, 0.5]),
+    ("LayoutHist", 0.05, [0.05, 0.5]),
+    ("CoocTexture", 0.05, [0.05, 0.2]),
+    ("SuSy", 0.001, [0.01, 0.02]),
+    ("Songs", 0.006, [0.005, 0.01]),
+    ("Syn16D2M", 0.0015, [0.03, 0.05]),
+    ("Syn32D2M", 0.0015, [0.08, 0.1]),
+    ("Syn64D2M", 0.0015, [0.16, 0.18]),
+]
+
+
+def run():
+    for name, scale, eps_pair in CASES:
+        d = paper_dataset(name, scale)
+        for eps in eps_pair:
+            k = select_k(d, eps, ks=[2, 3, 4, 6])
+            cfg = SelfJoinConfig(eps=eps, k=k, reorder=True, sortidu=True,
+                                 shortc=False, tile_size=32,
+                                 dim_block=16)
+            self_join(d, cfg)                # warmup: XLA compiles here
+            t_join = timeit(lambda: self_join(d, cfg))
+            t_ego = timeit(lambda: ego_join_counts(d, eps))
+            record(
+                f"table3/{name}/eps={eps}", t_join,
+                f"ego_us={t_ego:.0f};speedup={t_ego / max(t_join, 1):.2f}x",
+            )
+
+
+if __name__ == "__main__":
+    run()

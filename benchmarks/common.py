@@ -1,0 +1,30 @@
+"""Shared benchmark utilities.
+
+CPU-scale note (DESIGN.md #5): paper dataset sizes (|D| up to 5M) are
+shrunk by default so each figure reproduces in minutes on 1 CPU core; the
+full algorithm, eps values, lambda=40 distributions and k choices are the
+paper's.  ``--scale`` restores larger sizes.  Absolute wall times on CPU are
+indicative only -- architecture-level performance claims live in the
+roofline analysis (EXPERIMENTS.md #Roofline).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, repeats: int = 1) -> float:
+    """Best-of wall time in microseconds."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6

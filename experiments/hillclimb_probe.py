@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "/root/repo/src")
+import dataclasses, json, time
+import repro.configs as C
+import repro.launch.dryrun as DR
+
+# monkeypatch get_config to apply overrides per probe
+import repro.launch.specs  # noqa
+
+PROBES = [
+    # (arch, shape, overrides-dict, tag)
+    ("gemma3_12b", "train_4k", {"remat_mode": "pattern", "flash_remat": False}, "A0-pattern-noflashremat"),
+    ("gemma3_12b", "train_4k", {"remat_mode": "pattern", "flash_remat": True}, "A1-pattern-flashremat"),
+    ("gemma3_12b", "train_4k", {"remat_mode": "block", "flash_remat": True}, "A2-block-flashremat"),
+    ("gemma3_12b", "train_4k", {"remat_mode": "double", "flash_remat": True}, "A3-double-flashremat"),
+    ("qwen2p5_32b", "train_4k", {"remat_mode": "pattern", "flash_remat": False}, "B0-pattern"),
+    ("qwen2p5_32b", "train_4k", {"remat_mode": "block", "flash_remat": True}, "B1-block-flashremat"),
+    ("deepseek_v2_236b", "prefill_32k", {"remat_mode": "pattern", "flash_remat": False}, "C0-baseline"),
+    ("deepseek_v2_236b", "prefill_32k", {"remat_mode": "block", "flash_remat": True}, "C1-block-flashremat"),
+    ("arctic_480b", "train_4k", {"remat_mode": "pattern", "flash_remat": False}, "D0-baseline"),
+    ("arctic_480b", "train_4k", {"remat_mode": "block", "flash_remat": True}, "D1-block-flashremat"),
+]
+
+orig_get = C.get_config
+out = {}
+for arch, shape, over, tag in PROBES:
+    def patched(a, _arch=arch, _over=over):
+        cfg = orig_get(a)
+        return dataclasses.replace(cfg, **_over)
+    DR.get_config = patched
+    try:
+        t0 = time.time()
+        d, _ = DR.lower_cell(arch, shape, False)
+        d["probe"] = tag
+        out[f"{arch}__{shape}__{tag}"] = d
+        print(f"PROBE {tag}: step={d['step_time_s']*1e3:.0f}ms "
+              f"comp={d['compute_s']:.2f}s mem={d['memory_s']:.2f}s coll={d['collective_s']:.2f}s "
+              f"temp={(d.get('temp_bytes_per_chip') or 0)/1e9:.1f}GB frac={d['roofline_fraction']:.3f} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+    except Exception as e:
+        print(f"PROBE {tag} FAILED: {type(e).__name__} {str(e)[:200]}", flush=True)
+with open("/root/repo/experiments/hillclimb_probes.json", "w") as f:
+    json.dump(out, f, indent=1)
+print("DONE")

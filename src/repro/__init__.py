@@ -1,0 +1,9 @@
+"""repro: TPU-native similarity self-join framework.
+
+Reproduction of Gowanlock & Karsin 2018 ("GPU Accelerated Similarity
+Self-Join for Multi-Dimensional Data") as a production JAX framework --
+see DESIGN.md for the paper->system map and EXPERIMENTS.md for the
+dry-run/roofline/perf results.
+"""
+
+__version__ = "1.0.0"

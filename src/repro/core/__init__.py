@@ -1,0 +1,12 @@
+# The paper's primary contribution: the TPU-native distance similarity
+# self-join (GPU-Join of Gowanlock & Karsin 2018, adapted per DESIGN.md).
+from repro.core.types import (  # noqa: F401
+    SelfJoinConfig,
+    SelfJoinResult,
+    SelfJoinStats,
+)
+from repro.core.selfjoin import self_join  # noqa: F401
+from repro.core.reorder import variance_reorder, estimate_dim_variance  # noqa: F401
+from repro.core.grid import build_grid, build_tile_plan, GridIndex, TilePlan  # noqa: F401
+from repro.core.tuning import estimate_k_costs, select_k  # noqa: F401
+from repro.core.partition import make_partition, assign_dynamic, simulate_scaling  # noqa: F401

@@ -1,0 +1,53 @@
+"""Brute-force O(|D|^2) self-join references.
+
+Two oracles:
+  * ``brute_counts`` -- float64 numpy, direct (a-b)^2 formulation.  Ground
+    truth for correctness tests.
+  * ``brute_counts_f32`` -- float32, matmul formulation, matching the numeric
+    path of the TPU kernel (DESIGN.md #6) for bit-comparable testing.
+
+Both operate in blocks so |D| up to ~10^5 stays within memory.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def brute_counts(d: np.ndarray, eps: float, block: int = 1024) -> np.ndarray:
+    """Number of points within eps of each point (self included), float64."""
+    pts = np.asarray(d, dtype=np.float64)
+    n = pts.shape[0]
+    eps2 = np.float64(eps) ** 2
+    counts = np.zeros(n, dtype=np.int64)
+    for i0 in range(0, n, block):
+        a = pts[i0 : i0 + block]
+        for j0 in range(0, n, block):
+            b = pts[j0 : j0 + block]
+            diff = a[:, None, :] - b[None, :, :]
+            d2 = np.einsum("ijk,ijk->ij", diff, diff)
+            counts[i0 : i0 + block] += (d2 <= eps2).sum(axis=1)
+    return counts
+
+
+def brute_pairs(d: np.ndarray, eps: float) -> np.ndarray:
+    """All ordered (a, b) pairs with dist <= eps, float64. Small inputs only."""
+    pts = np.asarray(d, dtype=np.float64)
+    diff = pts[:, None, :] - pts[None, :, :]
+    d2 = np.einsum("ijk,ijk->ij", diff, diff)
+    a, b = np.nonzero(d2 <= np.float64(eps) ** 2)
+    return np.stack([a, b], axis=1).astype(np.int32)
+
+
+def brute_counts_f32(d: np.ndarray, eps: float, block: int = 2048) -> np.ndarray:
+    """float32 matmul-form counts: ||a||^2 + ||b||^2 - 2 a.b, matching the kernel."""
+    pts = np.asarray(d, dtype=np.float32)
+    n = pts.shape[0]
+    eps2 = np.float32(eps) ** 2
+    norms = np.einsum("ij,ij->i", pts, pts)
+    counts = np.zeros(n, dtype=np.int64)
+    for i0 in range(0, n, block):
+        a = pts[i0 : i0 + block]
+        na = norms[i0 : i0 + block]
+        d2 = na[:, None] + norms[None, :] - 2.0 * (a @ pts.T)
+        counts[i0 : i0 + block] = (d2 <= eps2).sum(axis=1)
+    return counts

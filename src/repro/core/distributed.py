@@ -1,0 +1,134 @@
+"""Distributed self-join: entity partitioning + ring pass (paper Sec. 6.2/6.3).
+
+The paper's strategy for |D| exceeding one device:
+
+  * every node starts with an entity-partitioned query shard Q_k of |D|/|p|
+    points and a copy E_k of the same shard;
+  * |p| rounds of BSP supersteps: join Q_k against the entry set currently
+    held, then send it to node (k+1) mod |p| and receive from (k-1) mod |p|.
+
+This maps 1:1 onto ``shard_map`` + ``jax.lax.ppermute`` on a ring -- the
+collective-permute uses ICI neighbour links only (no all-gather), so peak
+per-device memory stays at 2 shards and the per-round communication is
+exactly |D|/|p| points, totalling (|p|-1)|D| elements as derived in the paper.
+Compute of round i overlaps the permute of round i+1 on real hardware (XLA
+schedules the independent ops concurrently); the local join is the dense
+blocked distance count -- the same regular MXU work the tile kernel performs,
+here without the host-side grid since every (Q_k, E_j) block pair must be
+evaluated anyway during the rotation.
+
+Works unchanged on a 1-axis mesh ("data") or the joint ("pod","data") axes of
+the production mesh -- the ring simply spans both (inter-pod DCI hops occur
+once per pod boundary per round).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def _local_counts(q: jax.Array, e: jax.Array, eps2, row_block: int = 1024) -> jax.Array:
+    """Per-q counts of e-points within eps (matmul form, row-blocked)."""
+    nq = q.shape[0]
+    ne_norm = jnp.einsum("ij,ij->i", e, e)
+
+    pad = (-nq) % row_block
+    qp = jnp.pad(q, ((0, pad), (0, 0)))
+    blocks = qp.reshape(-1, row_block, q.shape[1])
+
+    def one(qb):
+        d2 = (
+            jnp.einsum("ij,ij->i", qb, qb)[:, None]
+            + ne_norm[None, :]
+            - 2.0 * (qb @ e.T)
+        )
+        return jnp.sum(d2 <= eps2, axis=1, dtype=jnp.int32)
+
+    counts = jax.lax.map(one, blocks).reshape(-1)
+    return counts[:nq]
+
+
+def _ring_perm(size: int) -> Sequence[Tuple[int, int]]:
+    return [(j, (j + 1) % size) for j in range(size)]
+
+
+def make_ring_counts_fn(mesh: Mesh, axes: AxisNames, eps: float, row_block: int = 1024):
+    """Build the shard_map'd ring-join counts program for ``mesh``.
+
+    Input: D sharded on its first axis over ``axes`` (entity partition).
+    Output: per-point neighbour counts (self included), identically sharded.
+    """
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    eps2 = float(eps) ** 2
+
+    def local(d_block):
+        psize = 1
+        for a in axes_t:
+            psize *= jax.lax.axis_size(a)
+        q = d_block
+        perm = _ring_perm(psize)
+
+        def body(_, carry):
+            counts, e = carry
+            counts = counts + _local_counts(q, e, eps2, row_block)
+            e = jax.lax.ppermute(e, axes_t if len(axes_t) > 1 else axes_t[0], perm)
+            return counts, e
+
+        counts0 = jnp.zeros(q.shape[0], jnp.int32)
+        # the carry must be device-varying over the mesh axes (shard_map vma)
+        pcast = getattr(jax.lax, "pcast", None)
+        if pcast is not None:
+            counts0 = pcast(counts0, axes_t, to="varying")
+        else:  # older spelling
+            counts0 = jax.lax.pvary(counts0, axes_t)
+        counts, _ = jax.lax.fori_loop(0, psize, body, (counts0, q))
+        return counts
+
+    spec = P(axes_t if len(axes_t) > 1 else axes_t[0])
+    return jax.jit(
+        jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
+    )
+
+
+def ring_self_join_counts(
+    d: np.ndarray,
+    eps: float,
+    mesh: Mesh,
+    axes: AxisNames = "data",
+    row_block: int = 1024,
+) -> np.ndarray:
+    """Driver: pad to the partition size, run the ring join, unpad.
+
+    Padding points sit at coordinate 3 + i*eps per row -- farther than any
+    possible eps-match to data in [0,1] and to each other, so they contribute
+    nothing to real counts and their own counts are sliced away.
+    """
+    pts = np.asarray(d, dtype=np.float32)
+    n_pts, n_dims = pts.shape
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    psize = int(np.prod([mesh.shape[a] for a in axes_t]))
+    pad = (-n_pts) % psize
+    if pad:
+        sentinel = 3.0 + (np.arange(pad, dtype=np.float32) * (2.0 * eps + 1.0))
+        pts = np.concatenate(
+            [pts, np.tile(sentinel[:, None], (1, n_dims))], axis=0
+        )
+    spec = P(axes_t if len(axes_t) > 1 else axes_t[0])
+    arr = jax.device_put(
+        jnp.asarray(pts), NamedSharding(mesh, spec)
+    )
+    fn = make_ring_counts_fn(mesh, axes, eps, row_block)
+    counts = np.asarray(jax.device_get(fn(arr)))
+    return counts[:n_pts].astype(np.int64)
+
+
+def ring_comm_elements(num_points: int, num_workers: int) -> int:
+    """Paper Sec. 6.3: total elements communicated = (|p| - 1) |D|."""
+    return (num_workers - 1) * num_points

@@ -1,0 +1,261 @@
+"""Grid index over the first k dimensions (paper Sections 3.2.1 and 4.1).
+
+Construction happens on the host, exactly as in the paper ("On the host, the
+data points D are sorted into unit-length bins in each dimension").  Only
+non-empty cells are stored; points are kept in a lookup array sorted by
+(linearized cell id, u-coordinate), so cell-mates are contiguous in memory --
+the property the paper uses for coalescing and we use for sequential VMEM DMA.
+
+TPU adaptation (DESIGN.md #1.1): the per-thread 3^k adjacent-cell walk of the
+CUDA kernel becomes *candidate tile-pair generation*: every non-empty cell is
+split into fixed-size tiles and each (cell, adjacent cell) pair contributes
+its tile cross-product to a flat work list that the distance kernel consumes
+as dense, regular MXU work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+_MAX_LINEAR = np.int64(2) ** 62
+
+
+@dataclasses.dataclass
+class GridIndex:
+    """Non-empty-cell grid over the first ``k`` dims of the (reordered) data."""
+
+    eps: float
+    k: int
+    n: int
+    u_dim: int                     # SORTIDU dimension (first un-indexed, or last indexed if k == n)
+    cells_per_dim: np.ndarray      # (k,) int64
+    strides: np.ndarray            # (k,) int64
+    point_order: np.ndarray        # (N,) int64; pts_sorted[i] == D[point_order[i]]
+    pts_sorted: np.ndarray         # (N, n) float32
+    cell_coords: np.ndarray        # (C, k) int64 coords of non-empty cells, id-sorted
+    cell_ids: np.ndarray           # (C,) int64 sorted linearized ids
+    cell_start: np.ndarray         # (C,) int64 into pts_sorted
+    cell_count: np.ndarray         # (C,) int64
+
+    @property
+    def num_cells(self) -> int:
+        return int(self.cell_ids.shape[0])
+
+
+@dataclasses.dataclass
+class TilePlan:
+    """Flat candidate work list: evaluate pts[A tile] x pts[B tile] pairs."""
+
+    tile_size: int
+    tile_start: np.ndarray         # (num_tiles,) int32 into pts_sorted
+    tile_len: np.ndarray           # (num_tiles,) int32, 1..tile_size
+    tile_cell: np.ndarray          # (num_tiles,) int32 owning cell index
+    pair_a: np.ndarray             # (P,) int32 tile index
+    pair_b: np.ndarray             # (P,) int32 tile index
+    num_tile_pairs_total: int      # before SORTIDU window pruning
+    num_candidates: int            # sum(len_a * len_b) over evaluated pairs
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.tile_start.shape[0])
+
+    @property
+    def num_pairs(self) -> int:
+        return int(self.pair_a.shape[0])
+
+
+def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
+    """Assign points to eps-length cells in the first k dims and sort them.
+
+    Cell coordinates are ``floor(x_j / eps)`` (paper Sec. 3.2.1).  Points
+    within a cell are secondarily sorted by the u-coordinate (SORTIDU,
+    Sec. 4.3); u is the first un-indexed dimension (highest-variance one
+    after REORDER) or the last indexed dimension when k == n.
+    """
+    pts = np.ascontiguousarray(np.asarray(d, dtype=np.float32))
+    n_pts, n = pts.shape
+    k = int(min(k, n))
+    u_dim = k if k < n else n - 1
+
+    coords = np.floor(pts[:, :k].astype(np.float64) / eps).astype(np.int64)
+    if n_pts:
+        cmin = coords.min(axis=0)
+        coords -= cmin  # origin at 0 per dim
+        cells_per_dim = coords.max(axis=0).astype(np.int64) + 1
+    else:
+        cells_per_dim = np.ones(k, dtype=np.int64)
+
+    # linearization strides; fall back to row-rank ids on (theoretical) overflow
+    total = np.prod(cells_per_dim.astype(object))
+    if total < int(_MAX_LINEAR):
+        strides = np.ones(k, dtype=np.int64)
+        for j in range(k - 2, -1, -1):
+            strides[j] = strides[j + 1] * cells_per_dim[j + 1]
+        ids = coords @ strides
+    else:  # pragma: no cover - only hit for k*log2(cells) > 62
+        strides = np.zeros(k, dtype=np.int64)
+        _, ids = np.unique(coords, axis=0, return_inverse=True)
+        ids = ids.astype(np.int64)
+
+    order = np.lexsort((pts[:, u_dim], ids))
+    ids_sorted = ids[order]
+    pts_sorted = np.ascontiguousarray(pts[order])
+
+    uniq_ids, first, counts = np.unique(
+        ids_sorted, return_index=True, return_counts=True
+    )
+    cell_coords = coords[order][first] if n_pts else np.zeros((0, k), np.int64)
+
+    return GridIndex(
+        eps=float(eps),
+        k=k,
+        n=n,
+        u_dim=u_dim,
+        cells_per_dim=cells_per_dim,
+        strides=strides,
+        point_order=order.astype(np.int64),
+        pts_sorted=pts_sorted,
+        cell_coords=cell_coords,
+        cell_ids=uniq_ids,
+        cell_start=first.astype(np.int64),
+        cell_count=counts.astype(np.int64),
+    )
+
+
+def adjacent_cell_pairs(grid: GridIndex) -> Tuple[np.ndarray, np.ndarray]:
+    """All ordered (cell, non-empty adjacent cell) index pairs.
+
+    For every non-empty cell the 3^k neighbourhood (paper Fig. 1) is probed
+    with a vectorized binary search into the sorted non-empty ids -- the same
+    ``|D| * 3^k * log2(|G|)`` search structure the paper models in Sec. 5.6,
+    but amortized per *cell* instead of per point.
+    """
+    c = grid.num_cells
+    if c == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    if not grid.strides.any() and grid.k > 1:  # pragma: no cover - rank-id fallback
+        return _adjacent_cell_pairs_dict(grid)
+
+    k = grid.k
+    offsets = np.stack(
+        np.meshgrid(*([np.array([-1, 0, 1], dtype=np.int64)] * k), indexing="ij"),
+        axis=-1,
+    ).reshape(-1, k)
+    out_a, out_b = [], []
+    for off in offsets:
+        ncoords = grid.cell_coords + off[None, :]
+        in_bounds = np.all(
+            (ncoords >= 0) & (ncoords < grid.cells_per_dim[None, :]), axis=1
+        )
+        nids = ncoords @ grid.strides
+        pos = np.searchsorted(grid.cell_ids, nids)
+        pos_c = np.minimum(pos, c - 1)
+        found = in_bounds & (grid.cell_ids[pos_c] == nids)
+        src = np.nonzero(found)[0]
+        out_a.append(src)
+        out_b.append(pos_c[src])
+    return np.concatenate(out_a), np.concatenate(out_b)
+
+
+def _adjacent_cell_pairs_dict(grid: GridIndex) -> Tuple[np.ndarray, np.ndarray]:
+    """Dict-based fallback when linearized ids would overflow int64."""
+    lookup = {tuple(cc): i for i, cc in enumerate(grid.cell_coords)}
+    k = grid.k
+    offsets = np.stack(
+        np.meshgrid(*([np.array([-1, 0, 1], dtype=np.int64)] * k), indexing="ij"),
+        axis=-1,
+    ).reshape(-1, k)
+    out_a, out_b = [], []
+    for i, cc in enumerate(grid.cell_coords):
+        for off in offsets:
+            j = lookup.get(tuple(cc + off))
+            if j is not None:
+                out_a.append(i)
+                out_b.append(j)
+    return np.asarray(out_a, np.int64), np.asarray(out_b, np.int64)
+
+
+def build_tile_plan(
+    grid: GridIndex,
+    tile_size: int,
+    sortidu: bool,
+    cell_pairs: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+) -> TilePlan:
+    """Split cells into tiles and expand cell pairs into tile pairs.
+
+    SORTIDU (Sec. 4.3) is applied at tile granularity: each tile's [min,max]
+    u-coordinate window is precomputed (points are u-sorted within cells) and
+    a tile pair is pruned when the windows are more than eps apart -- the
+    paper's Fig. 3 r..s window, vectorized.
+    """
+    t = int(tile_size)
+    counts = grid.cell_count
+    n_tiles_per_cell = (counts + t - 1) // t if counts.size else counts
+    tile_cell = np.repeat(np.arange(grid.num_cells, dtype=np.int64), n_tiles_per_cell)
+    # tile index within its cell
+    if tile_cell.size:
+        cell_tile_first = np.concatenate([[0], np.cumsum(n_tiles_per_cell)[:-1]])
+        within = np.arange(tile_cell.size, dtype=np.int64) - cell_tile_first[tile_cell]
+        tile_start = grid.cell_start[tile_cell] + within * t
+        tile_end = np.minimum(tile_start + t, grid.cell_start[tile_cell] + counts[tile_cell])
+        tile_len = tile_end - tile_start
+    else:
+        cell_tile_first = np.zeros(0, np.int64)
+        tile_start = np.zeros(0, np.int64)
+        tile_len = np.zeros(0, np.int64)
+
+    if cell_pairs is None:
+        cell_pairs = adjacent_cell_pairs(grid)
+    ca, cb = cell_pairs
+
+    # expand each (cell a, cell b) into tiles(a) x tiles(b)
+    na, nb = n_tiles_per_cell[ca], n_tiles_per_cell[cb]
+    reps = na * nb
+    pair_cell_a = np.repeat(ca, reps)
+    pair_cell_b = np.repeat(cb, reps)
+    # within-pair enumeration: for pair p with na*nb combos, local index l
+    if reps.size:
+        offs = np.concatenate([[0], np.cumsum(reps)[:-1]])
+        local = np.arange(int(reps.sum()), dtype=np.int64) - np.repeat(offs, reps)
+        la = local // np.repeat(nb, reps)
+        lb = local % np.repeat(nb, reps)
+        pair_a = cell_tile_first[pair_cell_a] + la
+        pair_b = cell_tile_first[pair_cell_b] + lb
+    else:
+        pair_a = np.zeros(0, np.int64)
+        pair_b = np.zeros(0, np.int64)
+
+    total_pairs = int(pair_a.size)
+
+    if sortidu and pair_a.size:
+        u = grid.pts_sorted[:, grid.u_dim]
+        # per-tile u window; points are u-sorted within each cell, so the
+        # window is [first point, last point] of the tile
+        u_lo = u[tile_start]
+        u_hi = u[tile_start + tile_len - 1]
+        gap_lo = u_lo[pair_b] - u_hi[pair_a]   # b entirely above a
+        gap_hi = u_lo[pair_a] - u_hi[pair_b]   # a entirely above b
+        keep = np.maximum(gap_lo, gap_hi) <= np.float32(grid.eps)
+        pair_a, pair_b = pair_a[keep], pair_b[keep]
+
+    if pair_a.size:
+        # group the work list by A tile: consecutive kernel grid steps revisit
+        # the same A block, so it stays VMEM-resident and per-pair HBM traffic
+        # drops to the B tile alone (EXPERIMENTS.md #Perf, kernel iteration 2)
+        order = np.lexsort((pair_b, pair_a))
+        pair_a, pair_b = pair_a[order], pair_b[order]
+
+    num_candidates = int((tile_len[pair_a] * tile_len[pair_b]).sum()) if pair_a.size else 0
+
+    return TilePlan(
+        tile_size=t,
+        tile_start=tile_start.astype(np.int32),
+        tile_len=tile_len.astype(np.int32),
+        tile_cell=tile_cell.astype(np.int32),
+        pair_a=pair_a.astype(np.int32),
+        pair_b=pair_b.astype(np.int32),
+        num_tile_pairs_total=total_pairs,
+        num_candidates=num_candidates,
+    )

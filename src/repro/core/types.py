@@ -1,0 +1,83 @@
+"""Core datatypes for the similarity self-join.
+
+The vocabulary follows the paper (Gowanlock & Karsin 2018):
+  D        -- database of |D| points in n dimensions, coordinates in [0,1]
+  eps      -- Euclidean search distance
+  k        -- number of indexed dimensions (Section 4.1), 2 <= k <= n
+  REORDER  -- dimensionality reordering by variance (Section 4.2)
+  SORTIDU  -- sort/window on the first un-indexed dimension u (Section 4.3)
+  SHORTC   -- short-circuited distance accumulation (Section 4.4),
+              realised on TPU as dimension-blocked pruning (DESIGN.md #1.2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SelfJoinConfig:
+    """Configuration mirroring GPU-Join's knobs (paper Alg. 1)."""
+
+    eps: float
+    k: int = 6                   # indexed dimensions (paper uses k=6 throughout Sec. 5)
+    reorder: bool = True         # REORDER (Sec. 4.2)
+    sortidu: bool = True         # SORTIDU (Sec. 4.3) -> tile u-window pruning
+    shortc: bool = True          # SHORTC (Sec. 4.4) -> dimension-blocked pruning
+    tile_size: int = 64          # points per tile (TPU adaptation; (8,128)-friendly)
+    dim_block: int = 32          # dims per SHORTC block (padded)
+    sample_frac: float = 0.01    # variance / result-size sampling fraction (Sec. 4.2, 5.6)
+    batch_size: int = 10**8      # b_s, result pairs per batch (paper Sec. 3.2.2)
+    min_batches: int = 3         # n_b >= 3 (paper: >= 3 CUDA streams)
+    use_pallas: bool = False     # evaluate tiles with the Pallas kernel (interpret on CPU)
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.eps <= 0:
+            raise ValueError(f"eps must be > 0, got {self.eps}")
+
+
+@dataclasses.dataclass
+class SelfJoinStats:
+    """Work counters used by the paper's evaluation (Secs. 5.5-5.7)."""
+
+    num_points: int = 0
+    num_dims: int = 0
+    k: int = 0
+    num_nonempty_cells: int = 0          # |G|
+    num_tiles: int = 0
+    num_tile_pairs_total: int = 0        # before SORTIDU window pruning
+    num_tile_pairs_evaluated: int = 0    # after pruning
+    num_candidates: int = 0              # point comparisons (mu in Sec. 5.6)
+    num_results: int = 0                 # |R| including self-pairs
+    dim_blocks_skipped: int = 0          # SHORTC effect (tile-level)
+    dim_blocks_total: int = 0
+
+    @property
+    def selectivity(self) -> float:
+        """S_D = (|R| - |D|) / |D|   (paper Eq. 1)."""
+        if self.num_points == 0:
+            return 0.0
+        return (self.num_results - self.num_points) / self.num_points
+
+
+@dataclasses.dataclass
+class SelfJoinResult:
+    """Result of a self-join.
+
+    ``counts[i]`` is the number of points within eps of point i (including
+    itself), indexed in the ORIGINAL point order.  ``pairs`` (optional) holds
+    ordered (key, value) index pairs as in the paper's key/value result
+    buffer; both (a,b) and (b,a) appear, as does (a,a).
+    """
+
+    counts: np.ndarray
+    stats: SelfJoinStats
+    pairs: Optional[np.ndarray] = None   # (num_results, 2) int32, original ids
+
+    @property
+    def total_results(self) -> int:
+        return int(self.counts.sum())

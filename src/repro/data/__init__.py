@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    exponential_dataset,
+    uniform_dataset,
+    clustered_dataset,
+    paper_dataset,
+    PAPER_DATASETS,
+)

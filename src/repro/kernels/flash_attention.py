@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (forward) -- the fix for the prefill cells.
+
+EXPERIMENTS.md #Roofline: the pure-JAX online-softmax attention materialises
+(B, H, qc, kc) fp32 score chunks between fusions, making every prefill_32k
+cell memory-bound.  This kernel keeps the score tile, the running max/sum
+and the output accumulator in VMEM scratch; only Q/K/V tiles stream in and
+the final output streams out -- per-tile HBM traffic drops from
+O(qc*kc) fp32 to O((qc+kc)*dh) bf16.
+
+Grid: (B*KV*G, nq, nk), nk minor so scratch carries across k-tiles of one
+q-tile.  Causal masking is positional; strictly-above-diagonal k-tiles skip
+their compute via pl.when (the DMA still runs -- Mosaic cannot skip it, but
+MXU work does not).
+
+Forward-only by design: the backward runs the jnp path (training uses
+flash_remat recomputation); serving/prefill is where this kernel lands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            q_chunk, k_chunk, num_k, scale, causal):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[:, :] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:, :] = jnp.zeros_like(l_ref)
+        acc_ref[:, :] = jnp.zeros_like(acc_ref)
+
+    q_start = i * q_chunk
+    k_start = j * k_chunk
+    # strictly above the causal diagonal: no valid pair in this tile
+    live = (not causal) or (k_start <= q_start + q_chunk - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)               # (qc, dh)
+        k = k_ref[0].astype(jnp.float32)               # (kc, dh)
+        v = v_ref[0].astype(jnp.float32)               # (kc, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                       # (qc, kc)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[:, :]                            # (qc, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, :] = l_ref[:, :] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[:, :] = acc_ref[:, :] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[:, :] = m_new
+
+    @pl.when(j == num_k - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[:, :] / jnp.maximum(l_ref[:, :], 1e-37)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_chunk", "k_chunk", "scale", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,      # (BH, Sq, dh)
+    k: jax.Array,      # (BH, Sk, dh)
+    v: jax.Array,      # (BH, Sk, dv)
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+    scale: float | None = None,
+    interpret: bool = True,
+):
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    if scale is None:
+        scale = float(dh) ** -0.5
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    if sq % qc or sk % kc:
+        raise ValueError(f"seq lens ({sq},{sk}) must divide chunks ({qc},{kc})")
+    nq, nk = sq // qc, sk // kc
+
+    body = functools.partial(
+        _kernel, q_chunk=qc, k_chunk=kc, num_k=nk, scale=scale, causal=causal
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kc, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, dv), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dv), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,213 @@
+"""Jitted wrappers around the tile-distance evaluation.
+
+Two interchangeable backends with one contract:
+
+  * ``backend="pallas"`` -- the TPU kernel (``distance_tile.py``), run in
+    interpret mode on CPU; the deployment path on real TPUs.
+  * ``backend="jnp"``    -- a vectorized jnp implementation of the same
+    blocked algorithm (used for CPU-speed benchmarking and as the XLA
+    fallback).
+
+Both take the tiled point layout produced by ``make_tiles`` and the flat
+candidate pair list from ``repro.core.grid.build_tile_plan``, and are
+evaluated in fixed-size chunks so XLA compiles exactly one program per
+dataset layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import distance_tile
+
+
+def make_tiles(
+    pts_sorted: np.ndarray,
+    tile_start: np.ndarray,
+    tile_len: np.ndarray,
+    tile_size: int,
+    dim_block: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Re-lay points into (num_tiles, T, n_pad) with zero padding.
+
+    Zero padding in both the point axis (tail tiles) and the dimension axis
+    (n -> n_pad) is distance-neutral; validity is enforced via ``tile_len``.
+    """
+    num_tiles = tile_start.shape[0]
+    n = pts_sorted.shape[1]
+    n_pad = ((n + dim_block - 1) // dim_block) * dim_block
+    tiles = np.zeros((max(num_tiles, 1), tile_size, n_pad), dtype=np.float32)
+    for i in range(num_tiles):
+        s, l = int(tile_start[i]), int(tile_len[i])
+        tiles[i, :l, :n] = pts_sorted[s : s + l]
+    return tiles, tile_len.astype(np.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "dim_block", "shortc", "return_mask")
+)
+def _eval_chunk_jnp(
+    tiles_pts, tile_len, pair_a, pair_b, *, eps, dim_block, shortc, return_mask
+):
+    t = tiles_pts.shape[1]
+    n_pad = tiles_pts.shape[2]
+    p = pair_a.shape[0]
+    a = tiles_pts[pair_a]                      # (P, T, n_pad)
+    b = tiles_pts[pair_b]
+    la = tile_len[pair_a]
+    lb = tile_len[pair_b]
+    rows = jnp.arange(t, dtype=jnp.int32)
+    valid = (rows[None, :, None] < la[:, None, None]) & (
+        rows[None, None, :] < lb[:, None, None]
+    )
+    eps2 = jnp.float32(eps) ** 2
+    neg_large = jnp.float32(3.0e38)
+
+    if not shortc:
+        na = jnp.einsum("ptn,ptn->pt", a, a)
+        nb_ = jnp.einsum("ptn,ptn->pt", b, b)
+        d2 = (
+            na[:, :, None]
+            + nb_[:, None, :]
+            - 2.0 * jnp.einsum("pin,pjn->pij", a, b)
+        )
+        skipped = jnp.zeros((p,), jnp.int32)
+    else:
+        nb_blocks = n_pad // dim_block
+        a_blk = a.reshape(p, t, nb_blocks, dim_block).transpose(2, 0, 1, 3)
+        b_blk = b.reshape(p, t, nb_blocks, dim_block).transpose(2, 0, 1, 3)
+
+        def body(carry, xs):
+            d2, done, skipped = carry
+            ab, bb = xs
+            na = jnp.einsum("ptn,ptn->pt", ab, ab)
+            nbv = jnp.einsum("ptn,ptn->pt", bb, bb)
+            contrib = (
+                na[:, :, None]
+                + nbv[:, None, :]
+                - 2.0 * jnp.einsum("pin,pjn->pij", ab, bb)
+            )
+            skipped = skipped + done.astype(jnp.int32)
+            d2 = jnp.where(done[:, None, None], d2, d2 + contrib)
+            d2_masked = jnp.where(valid, d2, neg_large)
+            done = done | (jnp.min(d2_masked, axis=(1, 2)) > eps2)
+            return (d2, done, skipped), None
+
+        init = (
+            jnp.zeros((p, t, t), jnp.float32),
+            jnp.zeros((p,), jnp.bool_),
+            jnp.zeros((p,), jnp.int32),
+        )
+        (d2, _, skipped), _ = jax.lax.scan(body, init, (a_blk, b_blk))
+
+    within = (d2 <= eps2) & valid
+    counts = within.sum(axis=2, dtype=jnp.int32)
+    if return_mask:
+        return counts, skipped, within.astype(jnp.int8)
+    return counts, skipped
+
+
+def tile_counts(
+    tiles_pts: np.ndarray,
+    tile_len: np.ndarray,
+    pair_a: np.ndarray,
+    pair_b: np.ndarray,
+    *,
+    eps: float,
+    dim_block: int = 32,
+    shortc: bool = True,
+    backend: str = "jnp",
+    chunk: int = 4096,
+    interpret: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Counts (P, T) and SHORTC-skipped block counts (P,) for all pairs."""
+    out_counts, out_skipped = [], []
+    for c, pa, pb, real in _chunks(pair_a, pair_b, chunk):
+        if backend == "pallas":
+            res = distance_tile.tile_pair_distance(
+                jnp.asarray(tiles_pts),
+                jnp.asarray(tile_len),
+                pa,
+                pb,
+                eps=eps,
+                dim_block=dim_block,
+                interpret=interpret,
+            )
+            counts, skipped = res[0], res[1][:, 0]
+            if not shortc:  # kernel always short-circuits; zero the stat
+                skipped = jnp.zeros_like(skipped)
+        else:
+            counts, skipped = _eval_chunk_jnp(
+                jnp.asarray(tiles_pts),
+                jnp.asarray(tile_len),
+                pa,
+                pb,
+                eps=eps,
+                dim_block=dim_block,
+                shortc=shortc,
+                return_mask=False,
+            )
+        out_counts.append(np.asarray(counts)[:real])
+        out_skipped.append(np.asarray(skipped)[:real])
+    if not out_counts:
+        t = tiles_pts.shape[1]
+        return np.zeros((0, t), np.int32), np.zeros((0,), np.int32)
+    return np.concatenate(out_counts), np.concatenate(out_skipped)
+
+
+def tile_mask(
+    tiles_pts: np.ndarray,
+    tile_len: np.ndarray,
+    pair_a: np.ndarray,
+    pair_b: np.ndarray,
+    *,
+    eps: float,
+    dim_block: int = 32,
+    backend: str = "jnp",
+    chunk: int = 512,
+    interpret: bool = True,
+):
+    """Yield (pair_slice_start, mask (Pc, T, T) int8 numpy) per chunk."""
+    done = 0
+    for c, pa, pb, real in _chunks(pair_a, pair_b, chunk):
+        if backend == "pallas":
+            _, _, mask = distance_tile.tile_pair_distance(
+                jnp.asarray(tiles_pts),
+                jnp.asarray(tile_len),
+                pa,
+                pb,
+                eps=eps,
+                dim_block=dim_block,
+                interpret=interpret,
+                return_mask=True,
+            )
+        else:
+            _, _, mask = _eval_chunk_jnp(
+                jnp.asarray(tiles_pts),
+                jnp.asarray(tile_len),
+                pa,
+                pb,
+                eps=eps,
+                dim_block=dim_block,
+                shortc=True,
+                return_mask=True,
+            )
+        yield done, np.asarray(mask)[:real]
+        done += real
+
+
+def _chunks(pair_a: np.ndarray, pair_b: np.ndarray, chunk: int):
+    """Fixed-size, zero-padded chunks (single XLA program per layout)."""
+    p = pair_a.shape[0]
+    for s in range(0, p, chunk):
+        pa = pair_a[s : s + chunk]
+        pb = pair_b[s : s + chunk]
+        real = pa.shape[0]
+        if real < chunk:
+            pa = np.pad(pa, (0, chunk - real))
+            pb = np.pad(pb, (0, chunk - real))
+        yield s, jnp.asarray(pa, jnp.int32), jnp.asarray(pb, jnp.int32), real

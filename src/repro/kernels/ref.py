@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the tile distance kernels.
+
+The oracle evaluates candidate tile pairs with the *direct* (a-b)^2
+formulation in float32 -- intentionally a different numeric path from the
+kernel's matmul form so tests exercise both (see DESIGN.md #6; exactness
+tests quantize coordinates so both forms are exact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_tile_counts(
+    tiles_pts: jax.Array,   # (num_tiles, T, n) float32, zero-padded
+    tile_len: jax.Array,    # (num_tiles,) int32
+    pair_a: jax.Array,      # (P,) int32
+    pair_b: jax.Array,      # (P,) int32
+    eps: float,
+) -> jax.Array:
+    """Per-(pair, a-point) neighbour counts, (P, T) int32."""
+    mask = ref_tile_mask(tiles_pts, tile_len, pair_a, pair_b, eps)
+    return mask.sum(axis=2, dtype=jnp.int32)
+
+
+def ref_attention(q, k, v, *, causal=True, scale=None):
+    """Dense softmax attention oracle. q: (BH, Sq, dh), k/v: (BH, Sk, dh/dv)."""
+    if scale is None:
+        scale = float(q.shape[-1]) ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[1], s.shape[2]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1.0e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_tile_mask(
+    tiles_pts: jax.Array,
+    tile_len: jax.Array,
+    pair_a: jax.Array,
+    pair_b: jax.Array,
+    eps: float,
+) -> jax.Array:
+    """Boolean (P, T, T): pair (i, j) within eps and both lanes valid."""
+    t = tiles_pts.shape[1]
+    a = tiles_pts[pair_a]            # (P, T, n)
+    b = tiles_pts[pair_b]
+    diff = a[:, :, None, :] - b[:, None, :, :]
+    d2 = jnp.einsum("pijn,pijn->pij", diff, diff)
+    la = tile_len[pair_a]            # (P,)
+    lb = tile_len[pair_b]
+    rows = jnp.arange(t, dtype=jnp.int32)
+    valid = (rows[None, :, None] < la[:, None, None]) & (
+        rows[None, None, :] < lb[:, None, None]
+    )
+    return (d2 <= jnp.float32(eps) ** 2) & valid

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+MUST be the very first lines above: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.  Do NOT
+set this flag anywhere else (smoke tests and benches see 1 device).
+
+For each cell this script:
+  1. builds abstract params/optimizer/caches (jax.eval_shape -- no memory),
+  2. jits the train/prefill/serve step with explicit in/out shardings,
+  3. ``.lower().compile()`` against the production mesh,
+  4. prints ``memory_analysis()`` (proves it fits) and ``cost_analysis()``,
+  5. parses the per-partition HLO for trip-count-aware FLOPs / HBM bytes /
+     collective wire bytes and writes experiments/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse   # noqa: E402
+import functools  # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax                                   # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, canonical, get_config   # noqa: E402
+from repro.launch import specs as S          # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_desc  # noqa: E402
+from repro.models import abstract_params, init_caches, prefill  # noqa: E402
+from repro.roofline import roofline_terms    # noqa: E402
+from repro.roofline.analysis import (        # noqa: E402
+    model_flops_decode, model_flops_prefill, model_flops_train,
+)
+from repro.sharding import batch_spec, cache_specs, dp_axes, param_specs  # noqa: E402
+from repro.train import OptHParams, adamw_init, make_serve_step, make_train_step  # noqa: E402
+
+FSDP_ARCHS = {"arctic_480b", "deepseek_v2_236b"}
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _opt_specs(pspecs):
+    return {
+        "m": pspecs, "v": pspecs, "step": P(),
+    }
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, sharding_overrides=None):
+    """Lower + compile one cell; returns (report dict, compiled)."""
+    cfg = get_config(arch)
+    cell = S.input_specs(cfg, shape)
+    if cell.skip_reason:
+        return {"arch": arch, "shape": shape, "skipped": cell.skip_reason}, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for a in mesh.axis_names:
+        chips *= mesh.shape[a]
+    fsdp = canonical(arch) in FSDP_ARCHS
+
+    params_abs = abstract_params(cfg)
+    pspecs = param_specs(params_abs, mesh, fsdp=fsdp)
+    if sharding_overrides:
+        pspecs = sharding_overrides(pspecs, mesh, cfg)
+    params_sh = _ns(mesh, pspecs)
+
+    t0 = time.time()
+    if cell.kind == "train":
+        opt_abs = jax.eval_shape(
+            functools.partial(adamw_init, state_dtype=cfg.opt_state_dtype), params_abs
+        )
+        opt_sh = _ns(mesh, _opt_specs(pspecs))
+        batch_sh = _ns(mesh, batch_spec(cell.batch, mesh))
+        step_fn = make_train_step(cfg, OptHParams())
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, cell.batch)
+        model_flops = model_flops_train(cfg, cell.global_batch, cell.seq)
+    elif cell.kind == "prefill":
+        batch_sh = _ns(mesh, batch_spec(cell.batch, mesh))
+
+        def prefill_fn(params, batch):
+            return prefill(params, batch, cfg, cache_len=cell.seq)
+
+        caches_abs = jax.eval_shape(
+            lambda: init_caches(cfg, cell.global_batch, cell.seq)
+        )
+        cspecs = cache_specs(caches_abs, mesh)
+        out_sh = (None, _ns(mesh, cspecs), None)
+        jitted = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh),
+                         out_shardings=out_sh)
+        with mesh:
+            lowered = jitted.lower(params_abs, cell.batch)
+        model_flops = model_flops_prefill(cfg, cell.global_batch, cell.seq)
+    else:  # decode
+        caches_abs = jax.eval_shape(
+            lambda: init_caches(cfg, cell.global_batch, cell.seq)
+        )
+        cspecs = cache_specs(caches_abs, mesh)
+        caches_sh = _ns(mesh, cspecs)
+        dp = dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        tok_sh = NamedSharding(
+            mesh, P(dp) if cell.global_batch % dp_size == 0 else P(None)
+        )
+        mem_abs = S.memory_spec(cfg, cell.global_batch)
+        serve = make_serve_step(cfg)
+
+        step_fn = (
+            (lambda p, c, t, pos, mem: serve(p, c, t, pos, memory=mem))
+            if mem_abs is not None else
+            (lambda p, c, t, pos: serve(p, c, t, pos))
+        )
+        in_sh = [params_sh, caches_sh, tok_sh, None]
+        args = [params_abs, caches_abs,
+                jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32)]
+        if mem_abs is not None:
+            in_sh.append(NamedSharding(mesh, P(None, None, None)))
+            args.append(mem_abs)
+        jitted = jax.jit(
+            step_fn, in_shardings=tuple(in_sh),
+            out_shardings=(tok_sh, None, caches_sh),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(*args)
+        model_flops = model_flops_decode(cfg, cell.global_batch, cell.seq)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch} x {shape} x {mesh_desc(mesh)}] memory_analysis:", mem)
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        ca = {}
+    print(f"[{arch} x {shape}] cost_analysis flops={ca.get('flops')} bytes={ca.get('bytes accessed')}")
+
+    report = roofline_terms(
+        arch=arch, shape=shape, mesh_desc=mesh_desc(mesh), chips=chips,
+        hlo_text=compiled.as_text(), model_flops=model_flops,
+        cost_analysis=ca, memory_analysis=mem,
+    )
+    d = report.as_dict()
+    d.update(
+        lower_s=t_lower, compile_s=t_compile, kind=cell.kind,
+        seq=cell.seq, global_batch=cell.global_batch, fsdp=fsdp,
+        temp_bytes_per_chip=getattr(mem, "temp_size_in_bytes", None),
+        arg_bytes_per_chip=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes_per_chip=getattr(mem, "output_size_in_bytes", None),
+        param_count=cfg.param_count(),
+        active_param_count=cfg.active_param_count(),
+    )
+    return d, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(S.SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{canonical(arch)}__{shape}__{'pod2' if mp else 'pod1'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_done and os.path.exists(path):
+                    print("skip (done):", tag)
+                    continue
+                print("=== cell:", tag, flush=True)
+                try:
+                    d, _ = lower_cell(arch, shape, mp)
+                    with open(path, "w") as f:
+                        json.dump(d, f, indent=1)
+                    if "skipped" in d:
+                        print("SKIPPED:", d["skipped"])
+                    else:
+                        print(
+                            f"ok t_lower={d['lower_s']:.1f}s t_compile={d['compile_s']:.1f}s "
+                            f"dominant={d['dominant']} step={d['step_time_s']*1e3:.2f}ms "
+                            f"frac={d['roofline_fraction']:.3f} mfu={d['mfu']:.3f}",
+                            flush=True,
+                        )
+                except Exception as e:  # record the failure, keep sweeping
+                    failures.append(tag)
+                    with open(path + ".fail", "w") as f:
+                        f.write(traceback.format_exc())
+                    print("FAIL:", tag, type(e).__name__, str(e)[:200], flush=True)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

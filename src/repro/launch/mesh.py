@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int = 8):
+    """Small mesh for CPU multi-device tests (2 x devices/2)."""
+    return jax.make_mesh((2, devices // 2), ("data", "model"))
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)

@@ -1,0 +1,90 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+
+Fault-tolerant loop: deterministic data cursor, periodic sharded checkpoints
+(atomic commit), automatic resume from the latest complete checkpoint --
+kill the process at any step and rerun the same command to continue.  On a
+real cluster each host runs this same binary under `jax.distributed`
+(launcher note in README); on CPU it trains the reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.data.tokens import TokenPipeline
+from repro.data.dedup import dedup_token_dataset
+from repro.models import init_params
+from repro.train import (
+    OptHParams, adamw_init, make_train_step,
+    restore_checkpoint, save_checkpoint, latest_step,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm_125m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the published config (needs a real pod)")
+    ap.add_argument("--dedup", action="store_true",
+                    help="run the self-join near-dup filter on the warmup batch "
+                         "(the paper's technique in the input pipeline)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full_config else get_reduced_config(args.arch)
+    hp = OptHParams(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+
+    params = init_params(cfg, jax.random.key(0))
+    opt = adamw_init(params, cfg.opt_state_dtype)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        like = jax.eval_shape(lambda: {"params": params, "opt": opt})
+        tree, step, extra = restore_checkpoint(args.ckpt_dir, like)
+        params, opt = tree["params"], tree["opt"]
+        start = int(extra.get("data_cursor", step))
+        print(f"resumed from step {step} (data cursor {start})")
+
+    if args.dedup:
+        warm = pipe.batch_at(start)["tokens"]
+        kept = dedup_token_dataset(warm, eps=0.05)
+        print(f"dedup: kept {kept.shape[0]}/{warm.shape[0]} examples")
+
+    step_fn = jax.jit(make_train_step(cfg, hp), donate_argnums=(0, 1))
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in pipe.batch_at(step).items()}
+        if cfg.encoder_groups is not None:
+            rng = np.random.default_rng(step)
+            batch["frames"] = jax.numpy.asarray(
+                rng.normal(size=(args.batch, 16, cfg.enc_input_dim)).astype(np.float32))
+        if cfg.vision_tokens:
+            rng = np.random.default_rng(step)
+            batch["patches"] = jax.numpy.asarray(
+                rng.normal(size=(args.batch, cfg.vision_tokens, cfg.vision_dim)).astype(np.float32))
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1,
+                            {"params": params, "opt": opt},
+                            extra={"data_cursor": step + 1})
+    print("done.")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

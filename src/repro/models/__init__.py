@@ -1,0 +1,11 @@
+from repro.models.config import BlockCfg, MLACfg, MoECfg, ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    count_params_analytic,
+    decode_step,
+    forward_loss,
+    forward_train,
+    init_caches,
+    init_params,
+    prefill,
+)

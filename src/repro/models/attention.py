@@ -1,0 +1,253 @@
+"""Attention: GQA/MHA/MQA, local (sliding-window), cross, and MLA variants.
+
+The training/prefill path is a pure-JAX flash formulation: online-softmax
+over key chunks inside a map over query chunks, so the (Sq, Sk) score matrix
+is never materialized -- required for the 32k shapes (a 32k x 32k score
+tensor would be ~TBs).  The decode path scores one query against the KV
+cache; local attention uses a ring-buffer cache of window size so the
+long_500k recurrent/hybrid cells carry O(window) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+NEG_INF = -1.0e30
+
+
+class AttnDims(NamedTuple):
+    heads: int
+    kv_heads: int
+    head_dim: int
+
+
+# ------------------------------------------------------------- init --------
+
+
+def attn_init(key, d_model, dims: AttnDims, dtype, *, qkv_bias=False, qk_norm=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, dh = dims
+    p = {
+        "wq": L.dense_init(kq, d_model, h * dh, dtype, bias=qkv_bias),
+        "wk": L.dense_init(kk, d_model, kvh * dh, dtype, bias=qkv_bias),
+        "wv": L.dense_init(kv, d_model, kvh * dh, dtype, bias=qkv_bias),
+        "wo": L.dense_init(ko, h * dh, d_model, dtype),
+    }
+    if qk_norm:
+        p["qnorm"] = L.rmsnorm_init(dh, dtype)
+        p["knorm"] = L.rmsnorm_init(dh, dtype)
+    return p
+
+
+# ------------------------------------------------------ flash attention ----
+
+
+def _flash(q, k, v, qpos, kpos, *, causal: bool, window: int,
+           q_chunk: int, k_chunk: int, remat_kv: bool = True,
+           scale: Optional[float] = None):
+    """Online-softmax attention.
+
+    q: (B, Sq, KV, G, dh)   k, v: (B, Sk, KV, dh)
+    qpos: (Sq,) kpos: (Sk,) absolute positions (mask built on the fly).
+    Returns (B, Sq, KV, G, dh) in q.dtype.
+    """
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]            # may differ from dh (MLA)
+    if scale is None:
+        scale = 1.0 / np.sqrt(dh)
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    pad_q = (-sq) % qc
+    pad_k = (-sk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(qpos, (0, pad_q), constant_values=-(10**9))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(kpos, (0, pad_k), constant_values=10**9)
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+
+    k_ch = kp.reshape(b, nk, kc, kvh, dh).transpose(1, 0, 2, 3, 4)
+    v_ch = vp.reshape(b, nk, kc, kvh, dv).transpose(1, 0, 2, 3, 4)
+    kpos_ch = kpos_p.reshape(nk, kc)
+
+    def q_block(args):
+        qb, qposb = args                      # (B, qc, KV, G, dh), (qc,)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, kposb = xs                # (B, kc, KV, dh), ..., (kc,)
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qb, kb, preferred_element_type=jnp.float32
+            ) * scale                          # (B, KV, G, qc, kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kposb[None, :] <= qposb[:, None]
+            if window > 0:
+                mask &= kposb[None, :] > (qposb[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vb, preferred_element_type=jnp.float32
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, dv), jnp.float32)
+        # remat_kv: recompute score chunks in the backward instead of saving
+        # the (B, KV, G, qc, kc) fp32 exp-score residual per k step
+        step = jax.checkpoint(kv_step) if remat_kv else kv_step
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k_ch, v_ch, kpos_ch))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return out.transpose(0, 3, 1, 2, 4)   # (B, qc, KV, G, dh)
+
+    q_blocks = qp.reshape(b, nq, qc, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpos_blocks = qpos_p.reshape(nq, qc)
+    out = jax.lax.map(q_block, (q_blocks, qpos_blocks))   # (nq, B, qc, KV, G, dh)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * qc, kvh, g, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ------------------------------------------------- train/prefill forward ---
+
+
+def attention(p, x, positions, cfg, block, *, memory=None, memory_pos=None,
+              causal=True, return_kv=False):
+    """Self- or cross-attention over a full sequence.
+
+    x: (B, S, D); positions: (S,) int32.
+    memory: (B, Sm, D_mem) for cross-attention (already projected to d_model
+    by the caller if needed).
+    Returns (B, S, D), and the projected (k, v) when ``return_kv`` (prefill
+    cache fill).
+    """
+    dims = AttnDims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_)
+    h, kvh, dh = dims
+    g = h // kvh
+    b, s, _ = x.shape
+
+    q = L.dense(p["wq"], x).reshape(b, s, kvh, g, dh)
+    src = memory if memory is not None else x
+    sm = src.shape[1]
+    k = L.dense(p["wk"], src).reshape(b, sm, kvh, dh)
+    v = L.dense(p["wv"], src).reshape(b, sm, kvh, dh)
+
+    if "qnorm" in p:
+        q = L.rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["knorm"], k, cfg.norm_eps)
+
+    cross = memory is not None
+    if not cross:
+        cos, sin = L.rope_cos_sin(positions, dh, block.rope_theta)
+        q = apply_rope_grouped(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        kpos = positions
+    else:
+        kpos = (
+            memory_pos
+            if memory_pos is not None
+            else jnp.arange(sm, dtype=jnp.int32)
+        )
+
+    out = _flash(
+        q, k, v, positions, kpos,
+        causal=causal and not cross, window=block.window if not cross else 0,
+        q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk, remat_kv=cfg.flash_remat,
+    )
+    y = L.dense(p["wo"], out.reshape(b, s, h * dh))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def apply_rope_grouped(q, cos, sin):
+    """RoPE on (B, S, KV, G, dh)."""
+    b, s, kvh, g, dh = q.shape
+    return L.apply_rope(q.reshape(b, s, kvh * g, dh), cos, sin).reshape(q.shape)
+
+
+# --------------------------------------------------------------- decode ----
+
+
+def init_cache(cfg, block, batch: int, cache_len: int, dtype):
+    """KV cache for one attention block.
+
+    Local attention keeps a ring buffer of ``window`` slots (constant-memory
+    long-context decode); global attention keeps ``cache_len`` slots.
+    ``pos`` records the absolute position stored in each slot (-1 = empty).
+    """
+    dims = AttnDims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_)
+    slots = min(block.window, cache_len) if block.window > 0 else cache_len
+    return {
+        "k": jnp.zeros((batch, slots, dims.kv_heads, dims.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, dims.kv_heads, dims.head_dim), dtype),
+        "pos": jnp.full((slots,), -1, jnp.int32),
+    }
+
+
+def attention_decode(p, x, cache, pos, cfg, block, *, memory=None):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 absolute position.
+
+    Returns (out (B, 1, D), new_cache).
+    """
+    dims = AttnDims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_)
+    h, kvh, dh = dims
+    g = h // kvh
+    b = x.shape[0]
+
+    q = L.dense(p["wq"], x).reshape(b, 1, kvh, g, dh)
+    if memory is not None:  # cross-attn: static memory, no cache update
+        sm = memory.shape[1]
+        k = L.dense(p["wk"], memory).reshape(b, sm, kvh, dh)
+        v = L.dense(p["wv"], memory).reshape(b, sm, kvh, dh)
+        if "qnorm" in p:
+            q = L.rmsnorm(p["qnorm"], q, cfg.norm_eps)
+            k = L.rmsnorm(p["knorm"], k, cfg.norm_eps)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+        )[:, :, :, 0] / np.sqrt(dh)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", w, v, preferred_element_type=jnp.float32)
+        out = out.reshape(b, 1, h * dh).astype(x.dtype)
+        return L.dense(p["wo"], out), cache
+
+    k1 = L.dense(p["wk"], x).reshape(b, 1, kvh, dh)
+    v1 = L.dense(p["wv"], x).reshape(b, 1, kvh, dh)
+    if "qnorm" in p:
+        q = L.rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k1 = L.rmsnorm(p["knorm"], k1, cfg.norm_eps)
+
+    posv = jnp.asarray(pos, jnp.int32)
+    cos, sin = L.rope_cos_sin(posv[None], dh, block.rope_theta)
+    q = apply_rope_grouped(q, cos, sin)
+    k1 = L.apply_rope(k1, cos, sin)
+
+    slots = cache["k"].shape[1]
+    slot = posv % slots  # ring buffer; identity when slots == cache_len > pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], posv[None], (slot,))
+
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, ck.astype(q.dtype), preferred_element_type=jnp.float32
+    )[:, :, :, 0] / np.sqrt(dh)                       # (B, KV, G, slots)
+    valid = (cpos >= 0) & (cpos <= posv)
+    if block.window > 0:
+        valid &= cpos > (posv - block.window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", w, cv.astype(q.dtype), preferred_element_type=jnp.float32
+    ).reshape(b, 1, h * dh).astype(x.dtype)
+    return L.dense(p["wo"], out), {"k": ck, "v": cv, "pos": cpos}

@@ -1,0 +1,217 @@
+"""Decoder/encoder block assembly from BlockCfg.
+
+Every block kind exposes three entry points sharing one param pytree:
+  init   -- parameters
+  seq    -- full-sequence forward (train / prefill); optionally fills a cache
+  step   -- single-token decode against the cache/state
+Pre-norm residual structure throughout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import recurrent as R
+from repro.models.config import BlockCfg, ModelConfig
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _ffn_init(key, cfg, blk, dtype):
+    if blk.moe:
+        return MOE.moe_init(key, cfg, dtype)
+    return L.swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _ffn_apply(p, x, cfg, blk):
+    if blk.moe:
+        return MOE.moe_apply(p, x, cfg)
+    return L.swiglu(p, x)
+
+
+def block_init(key, cfg: ModelConfig, blk: BlockCfg):
+    dtype = _dtype(cfg)
+    d = cfg.d_model
+    dims = A.AttnDims(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {"ln1": L.rmsnorm_init(d, dtype)}
+    if blk.kind == "attn":
+        if cfg.mla is not None:
+            p["attn"] = MLA.mla_init(k1, cfg, dtype)
+        else:
+            p["attn"] = A.attn_init(
+                k1, d, dims, dtype, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm
+            )
+        if blk.cross_attn:
+            p["lnx"] = L.rmsnorm_init(d, dtype)
+            p["xattn"] = A.attn_init(k4, d, dims, dtype, qk_norm=cfg.qk_norm)
+            p["xgate"] = jnp.zeros((1,), dtype)  # gated cross-attn (llama-vision)
+        if blk.mlp:
+            p["ln2"] = L.rmsnorm_init(d, dtype)
+            p["ffn"] = _ffn_init(k2, cfg, blk, dtype)
+    elif blk.kind == "recurrent":
+        p["rec"] = R.recurrent_block_init(k1, d, cfg.d_rnn, cfg.conv_width, dtype)
+        if blk.mlp:
+            p["ln2"] = L.rmsnorm_init(d, dtype)
+            p["ffn"] = _ffn_init(k2, cfg, blk, dtype)
+    elif blk.kind == "mlstm":
+        p["cell"] = R.mlstm_init(k1, d, cfg.num_heads, 2 * d, dtype)
+    elif blk.kind == "slstm":
+        p["cell"] = R.slstm_init(k1, d, cfg.num_heads, dtype)
+    else:
+        raise ValueError(f"unknown block kind {blk.kind}")
+    return p
+
+
+# --------------------------------------------------------- sequence form ---
+
+
+def block_seq(p, x, positions, cfg, blk, *, memory=None, want_cache=False,
+              cache_len=0):
+    """Full-sequence block. Returns (x, cache_or_state or None)."""
+    cache = None
+    if blk.kind == "attn":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.mla is not None:
+            # absorbed form pays 1.8x score FLOPs to kill per-head K/V
+            # traffic -- a win for prefill (memory-bound, no backward) but a
+            # regression for training (EXPERIMENTS.md #Perf cell B iter 3):
+            # gate it on the prefill path (want_cache)
+            use_absorbed = cfg.mla_absorbed and want_cache
+            mla_fn = (
+                MLA.mla_attention_absorbed if use_absorbed
+                else MLA.mla_attention
+            )
+            y = mla_fn(p["attn"], h, positions, cfg, blk)
+            if want_cache:
+                cache = _mla_prefill_cache(p["attn"], h, positions, cfg, cache_len)
+        else:
+            if want_cache:
+                y, (k, v) = A.attention(
+                    p["attn"], h, positions, cfg, blk,
+                    causal=not blk.bidirectional, return_kv=True,
+                )
+                cache = _kv_prefill_cache(k, v, positions, cfg, blk, cache_len)
+            else:
+                y = A.attention(
+                    p["attn"], h, positions, cfg, blk,
+                    causal=not blk.bidirectional,
+                )
+        x = x + y
+        if blk.cross_attn and memory is not None:
+            hx = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+            gx = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gx * A.attention(p["xattn"], hx, positions, cfg, blk, memory=memory)
+        if blk.mlp:
+            x = x + _ffn_apply(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg, blk)
+    elif blk.kind == "recurrent":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, state = R.recurrent_block_seq(p["rec"], h)
+        x = x + y
+        if blk.mlp:
+            x = x + _ffn_apply(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg, blk)
+        cache = state if want_cache else None
+    elif blk.kind == "mlstm":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, state = R.mlstm_seq(p["cell"], h, cfg.num_heads)
+        x = x + y
+        cache = state if want_cache else None
+    elif blk.kind == "slstm":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, state = R.slstm_seq(p["cell"], h, cfg.num_heads)
+        x = x + y
+        cache = state if want_cache else None
+    return x, cache
+
+
+def _kv_prefill_cache(k, v, positions, cfg, blk, cache_len):
+    """Place prefill K/V into a decode cache (ring layout for local attn)."""
+    b, s = k.shape[0], k.shape[1]
+    cache = A.init_cache(cfg, blk, b, cache_len, k.dtype)
+    slots = cache["k"].shape[1]
+    if s >= slots:  # keep the last `slots` positions (ring)
+        sel = jnp.arange(s - slots, s)
+        kk, vv, pp = k[:, sel], v[:, sel], positions[sel]
+        idx = pp % slots
+        cache["k"] = cache["k"].at[:, idx].set(kk)
+        cache["v"] = cache["v"].at[:, idx].set(vv)
+        cache["pos"] = cache["pos"].at[idx].set(pp)
+    else:
+        idx = positions % slots
+        cache["k"] = cache["k"].at[:, idx].set(k)
+        cache["v"] = cache["v"].at[:, idx].set(v)
+        cache["pos"] = cache["pos"].at[idx].set(positions)
+    return cache
+
+
+def _mla_prefill_cache(p_attn, h, positions, cfg, cache_len):
+    m = cfg.mla
+    b, s, _ = h.shape
+    cache = MLA.mla_init_cache(cfg, b, cache_len, h.dtype)
+    ckv = L.rmsnorm(p_attn["kvnorm"], L.dense(p_attn["wdkv"], h), cfg.norm_eps)
+    kr = L.dense(p_attn["wkr"], h)
+    cos, sin = L.rope_cos_sin(positions, m.qk_rope_head_dim, 10_000.0)
+    kr = L.apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0]
+    cache["ckv"] = cache["ckv"].at[:, positions].set(ckv.astype(cache["ckv"].dtype))
+    cache["kr"] = cache["kr"].at[:, positions].set(kr.astype(cache["kr"].dtype))
+    cache["pos"] = cache["pos"].at[positions].set(positions)
+    return cache
+
+
+# ------------------------------------------------------------ step form ----
+
+
+def block_step(p, x, cache, pos, cfg, blk, *, memory=None):
+    """One-token decode. x: (B,1,D). Returns (x, new_cache)."""
+    if blk.kind == "attn":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.mla is not None:
+            y, cache = MLA.mla_decode(p["attn"], h, cache, pos, cfg, blk)
+        else:
+            y, cache = A.attention_decode(p["attn"], h, cache, pos, cfg, blk)
+        x = x + y
+        if blk.cross_attn and memory is not None:
+            hx = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+            gx = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+            y, _ = A.attention_decode(
+                p["xattn"], hx, None, pos, cfg, blk, memory=memory
+            )
+            x = x + gx * y
+        if blk.mlp:
+            x = x + _ffn_apply(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg, blk)
+    elif blk.kind == "recurrent":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = R.recurrent_block_step(p["rec"], h, cache)
+        x = x + y
+        if blk.mlp:
+            x = x + _ffn_apply(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg, blk)
+    elif blk.kind == "mlstm":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = R.mlstm_step(p["cell"], h, cache, cfg.num_heads)
+        x = x + y
+    elif blk.kind == "slstm":
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = R.slstm_step(p["cell"], h, cache, cfg.num_heads)
+        x = x + y
+    return x, cache
+
+
+def block_init_cache(cfg, blk, batch: int, cache_len: int, dtype):
+    if blk.kind == "attn":
+        if cfg.mla is not None:
+            return MLA.mla_init_cache(cfg, batch, cache_len, dtype)
+        return A.init_cache(cfg, blk, batch, cache_len, dtype)
+    if blk.kind == "recurrent":
+        return R.recurrent_block_init_state(batch, cfg.d_rnn, cfg.conv_width, dtype)
+    if blk.kind == "mlstm":
+        dh = 2 * cfg.d_model // cfg.num_heads
+        return R.mlstm_init_state(batch, cfg.num_heads, dh)
+    if blk.kind == "slstm":
+        return R.slstm_init_state(batch, cfg.num_heads, cfg.d_model // cfg.num_heads)
+    raise ValueError(blk.kind)

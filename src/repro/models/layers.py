@@ -1,0 +1,198 @@
+"""Elementary layers (functional style: init_* returns a param pytree dict,
+apply functions are pure).  Numerics policy (DESIGN.md #6): params in
+``cfg.param_dtype``, activations in ``cfg.activation_dtype``, every matmul
+accumulates in float32 via ``preferred_element_type``, norms/softmax in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale: Optional[float] = None):
+    std = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    y = jnp.einsum("...i,io->...o", x, p["w"], preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(out_dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, ids, out_dtype):
+    return jnp.take(p["table"], ids, axis=0).astype(out_dtype)
+
+
+def unembed(p_embed, x):
+    """Tied readout: x @ table^T, fp32 logits."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p_embed["table"], preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------- RoPE -----
+
+
+def rope_cos_sin(positions, dim: int, theta: float):
+    """positions (...,) int32 -> (..., dim/2) cos & sin, fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, n_heads, dh); cos/sin (..., S, dh/2) -- NeoX half split."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLPs -----
+
+
+def swiglu_init(key, d: int, f: int, dtype):
+    kg, ki, ko = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, d, f, dtype),
+        "wi": dense_init(ki, d, f, dtype),
+        "wo": dense_init(ko, f, d, dtype),
+    }
+
+
+def swiglu(p, x):
+    g = dense(p["wg"], x, jnp.float32)
+    u = dense(p["wi"], x, jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return dense(p["wo"], h)
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype):
+    ki, ko = jax.random.split(key)
+    return {
+        "wi": dense_init(ki, d, f, dtype, bias=True),
+        "wo": dense_init(ko, f, d, dtype, bias=True),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(dense(p["wi"], x, jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], h)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def blocked_cross_entropy(
+    x, labels, *, table=None, w=None, bias=None, chunk: int = 8192,
+    logit_softcap: float = 0.0,
+):
+    """Streaming CE loss over vocab chunks -- logits are NEVER materialized.
+
+    The (B, S, V) fp32 logits of a 256k vocab are ~65 GB per device at the
+    train_4k shape; this computes max/logsumexp/label-logit chunk by chunk
+    (online softmax over the vocab axis) with rematerialized backward, so
+    peak memory is (B, S, chunk).  Handles non-divisible vocab via an
+    overlapping last chunk with first-seen masking.
+
+    x: (B, S, D); labels: (B, S) int32 (negative = masked out).
+    table: (V, D) tied embedding, or w: (D, V) untied unembed matrix.
+    Returns mean loss over unmasked positions (fp32 scalar).
+    """
+    v = table.shape[0] if table is not None else w.shape[1]
+    chunk = min(chunk, v)
+    nc = -(-v // chunk)
+    starts = [i * chunk for i in range(nc)]
+    valid_from = list(starts)
+    if starts[-1] + chunk > v:       # overlap the last chunk; mask re-seen cols
+        starts[-1] = v - chunk
+    starts = jnp.asarray(starts, jnp.int32)
+    valid_from = jnp.asarray(valid_from, jnp.int32)
+
+    b, s, _ = x.shape
+    # masked (negative) labels pick index 0 -- the -inf never reaches the
+    # loss because the mask zeroes those positions (avoid 0 * inf = NaN)
+    lab = jnp.where(labels >= 0, labels, 0).astype(jnp.int32)
+
+    def body(carry, xs):
+        m, z, picked = carry
+        start, vfrom = xs
+        if table is not None:
+            wc = jax.lax.dynamic_slice(table, (start, 0), (chunk, table.shape[1]))
+            lc = jnp.einsum("bsd,cd->bsc", x, wc, preferred_element_type=jnp.float32)
+        else:
+            wc = jax.lax.dynamic_slice(w, (0, start), (w.shape[0], chunk))
+            lc = jnp.einsum("bsd,dc->bsc", x, wc, preferred_element_type=jnp.float32)
+        if bias is not None:
+            lc = lc + jax.lax.dynamic_slice(bias, (start,), (chunk,)).astype(jnp.float32)
+        lc = softcap(lc, logit_softcap)
+        gcol = start + jnp.arange(chunk, dtype=jnp.int32)
+        seen_first = gcol >= vfrom
+        lc = jnp.where(seen_first[None, None, :], lc, -jnp.inf)
+        m_new = jnp.maximum(m, lc.max(axis=-1))
+        z = z * jnp.exp(m - m_new) + jnp.exp(lc - m_new[..., None]).sum(axis=-1)
+        local = lab - start
+        in_chunk = (local >= 0) & (local < chunk) & (lab - vfrom >= 0)
+        safe = jnp.clip(local, 0, chunk - 1)
+        got = jnp.take_along_axis(lc, safe[..., None], axis=-1)[..., 0]
+        picked = jnp.where(in_chunk & (got > -jnp.inf), got, picked)
+        return (m_new, z, picked), None
+
+    init = (
+        jnp.full((b, s), -jnp.inf, jnp.float32),
+        jnp.zeros((b, s), jnp.float32),
+        jnp.full((b, s), -jnp.inf, jnp.float32),
+    )
+    (m, z, picked), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (starts, valid_from)
+    )
+    ll = picked - m - jnp.log(jnp.maximum(z, 1e-37))
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

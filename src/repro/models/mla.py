@@ -1,0 +1,183 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Training/prefill uses the decompressed form; decode uses the *absorbed* form:
+the KV up-projection is folded into the query/output paths so the cache holds
+only the 512-dim latent c_kv plus the 64-dim decoupled RoPE key -- the paper's
+93% cache reduction, and the reason deepseek-v2's decode cells are far less
+HBM-bound than GQA at the same scale (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.attention import _flash, NEG_INF
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    keys = jax.random.split(key, 6)
+    return {
+        "wdq": L.dense_init(keys[0], d, m.q_lora_rank, dtype),
+        "qnorm": L.rmsnorm_init(m.q_lora_rank, dtype),
+        "wuq": L.dense_init(keys[1], m.q_lora_rank, h * dqk, dtype),
+        "wdkv": L.dense_init(keys[2], d, m.kv_lora_rank, dtype),
+        "kvnorm": L.rmsnorm_init(m.kv_lora_rank, dtype),
+        "wukv": L.dense_init(
+            keys[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dtype
+        ),
+        "wkr": L.dense_init(keys[4], d, m.qk_rope_head_dim, dtype),
+        "wo": L.dense_init(keys[5], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    cq = L.rmsnorm(p["qnorm"], L.dense(p["wdq"], x), cfg.norm_eps)
+    q = L.dense(p["wuq"], cq).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    qn, qr = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    cos, sin = L.rope_cos_sin(positions, m.qk_rope_head_dim, 10_000.0)
+    qr = L.apply_rope(qr, cos, sin)
+    return qn, qr
+
+
+def mla_attention(p, x, positions, cfg, block):
+    """Train/prefill (decompressed) MLA. x: (B, S, D) -> (B, S, D)."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    qn, qr = _project_q(p, x, cfg, positions)
+
+    ckv = L.rmsnorm(p["kvnorm"], L.dense(p["wdkv"], x), cfg.norm_eps)   # (B,S,r_kv)
+    kr = L.dense(p["wkr"], x)                                           # (B,S,dr)
+    cos, sin = L.rope_cos_sin(positions, m.qk_rope_head_dim, 10_000.0)
+    kr = L.apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0]             # single head
+    kv = L.dense(p["wukv"], ckv).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    kn, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+
+    q = jnp.concatenate([qn, qr], axis=-1)[:, :, :, None, :]            # (B,S,H,1,dqk)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )                                                                   # (B,S,H,dqk)
+    out = _flash(
+        q, k, v, positions, positions,
+        causal=True, window=0, q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+        remat_kv=cfg.flash_remat,
+    )                                                                   # (B,S,H,1,dv)
+    return L.dense(p["wo"], out.reshape(b, s, h * m.v_head_dim))
+
+
+def mla_attention_absorbed(p, x, positions, cfg, block):
+    """Absorbed-form MLA for train/prefill: the KV up-projection is folded
+    into the query/output paths, so attention runs MQA-style against the
+    SHARED (kv_lora + rope)-dim latent -- no per-head K/V materialization
+    (128 heads x 192 dims otherwise; see EXPERIMENTS.md #Perf cell C).
+    Mathematically identical to ``mla_attention``; score/value FLOPs rise
+    (contraction over 576 vs 320 dims) in exchange for ~H x less K/V traffic.
+    """
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    qn, qr = _project_q(p, x, cfg, positions)                  # (B,S,H,dn/dr)
+
+    ckv = L.rmsnorm(p["kvnorm"], L.dense(p["wdkv"], x), cfg.norm_eps)  # (B,S,r)
+    kr = L.dense(p["wkr"], x)
+    cos, sin = L.rope_cos_sin(positions, m.qk_rope_head_dim, 10_000.0)
+    kr = L.apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0]            # (B,S,dr)
+
+    wukv = p["wukv"]["w"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    wuk = wukv[..., : m.qk_nope_head_dim]
+    wuv = wukv[..., m.qk_nope_head_dim :]
+
+    q_eff = jnp.einsum("bshd,rhd->bshr", qn, wuk,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    q_cat = jnp.concatenate([q_eff, qr], axis=-1)              # (B,S,H,r+dr)
+    k_cat = jnp.concatenate([ckv, kr], axis=-1)[:, :, None, :]  # (B,S,1,r+dr)
+    v_lat = ckv[:, :, None, :]                                  # (B,S,1,r)
+
+    out = _flash(
+        q_cat.reshape(b, s, 1, h, m.kv_lora_rank + m.qk_rope_head_dim),
+        k_cat, v_lat, positions, positions,
+        causal=True, window=0, q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+        remat_kv=cfg.flash_remat,
+        scale=1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim),
+    )                                                           # (B,S,1,H,r)
+    o_lat = out[:, :, 0]                                        # (B,S,H,r)
+    y = jnp.einsum("bshr,rhd->bshd", o_lat.astype(jnp.float32), wuv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return L.dense(p["wo"], y.reshape(b, s, h * m.v_head_dim))
+
+
+def mla_init_cache(cfg, batch: int, cache_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg, block):
+    """Absorbed-form decode. x: (B, 1, D); cache holds (c_kv, k_rope)."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    posv = jnp.asarray(pos, jnp.int32)
+
+    qn, qr = _project_q(p, x, cfg, posv[None])                          # (B,1,H,*)
+
+    ckv1 = L.rmsnorm(p["kvnorm"], L.dense(p["wdkv"], x), cfg.norm_eps)  # (B,1,r)
+    kr1 = L.dense(p["wkr"], x)
+    cos, sin = L.rope_cos_sin(posv[None], m.qk_rope_head_dim, 10_000.0)
+    kr1 = L.apply_rope(kr1[:, :, None, :], cos, sin)[:, :, 0]           # (B,1,dr)
+
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv1.astype(cache["ckv"].dtype), (0, posv, 0)
+    )
+    kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr1.astype(cache["kr"].dtype), (0, posv, 0)
+    )
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], posv[None], (posv,))
+
+    wukv = p["wukv"]["w"].reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    wuk = wukv[..., : m.qk_nope_head_dim]                               # (r, H, dn)
+    wuv = wukv[..., m.qk_nope_head_dim :]                               # (r, H, dv)
+
+    # absorb K up-projection into q: q_eff (B, H, r)
+    q_eff = jnp.einsum(
+        "bhd,rhd->bhr", qn[:, 0], wuk, preferred_element_type=jnp.float32
+    )
+    s_lat = jnp.einsum(
+        "bhr,bsr->bhs", q_eff, ckv.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    s_rope = jnp.einsum(
+        "bhd,bsd->bhs", qr[:, 0].astype(jnp.float32), kr.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (s_lat + s_rope) * scale
+    valid = (cpos >= 0) & (cpos <= posv)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+
+    o_lat = jnp.einsum(
+        "bhs,bsr->bhr", w, ckv.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum(
+        "bhr,rhd->bhd", o_lat, wuv, preferred_element_type=jnp.float32
+    ).reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return L.dense(p["wo"], out), {"ckv": ckv, "kr": kr, "pos": cpos}

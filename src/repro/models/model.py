@@ -1,0 +1,264 @@
+"""The language model: layer groups scanned over stacked parameters.
+
+Each layer group is ``(pattern, repeat)``; parameters of each pattern
+position are stacked along a leading repeat axis and the group is a single
+``lax.scan`` -- a 64-layer model lowers to one block body per pattern
+position, keeping compile time and HLO size flat in depth (DESIGN.md #2).
+
+Entry points:
+  init_params / abstract_params
+  forward_train(params, batch)           -> (loss, logits)
+  prefill(params, tokens, cache_len)     -> (last-token logits, cache)
+  decode_step(params, cache, token, pos) -> (logits, new cache)
+Encoder-decoder (seamless) and VLM (llama-3.2-vision) share these entry
+points; their extra inputs (frames / patch embeddings) ride in the batch
+dict, produced in dry-runs by ``input_specs()`` stubs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.config import BlockCfg, ModelConfig
+
+
+def _adt(cfg):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------- init -----
+
+
+def _group_init(key, cfg, pattern, repeat):
+    """Stacked params: per pattern position, a pytree with leading (repeat,)."""
+    out = []
+    for i, blk in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), repeat)
+        out.append(jax.vmap(lambda k, b=blk: B.block_init(k, cfg, b))(keys))
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = _pdt(cfg)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "groups": [
+            _group_init(jax.random.fold_in(ks[1], gi), cfg, pattern, repeat)
+            for gi, (pattern, repeat) in enumerate(cfg.groups)
+        ],
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab, dtype)
+    if cfg.encoder_groups is not None:
+        params["enc_proj"] = L.dense_init(ks[3], cfg.enc_input_dim, cfg.d_model, dtype)
+        params["enc_groups"] = [
+            _group_init(jax.random.fold_in(ks[4], gi), cfg, pattern, repeat)
+            for gi, (pattern, repeat) in enumerate(cfg.encoder_groups)
+        ]
+        params["enc_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.vision_tokens:
+        params["vision_proj"] = L.dense_init(ks[5], cfg.vision_dim, cfg.d_model, dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree -- no allocation (used by the dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0)
+    )
+
+
+# ------------------------------------------------------------- forward -----
+
+
+def _run_groups(groups_params, x, positions, cfg, group_cfgs, *, memory=None,
+                want_cache=False, cache_len=0):
+    """Apply all layer groups; optionally collect decode caches."""
+    caches = []
+    for gp, (pattern, repeat) in zip(groups_params, group_cfgs):
+
+        per_block = cfg.remat and cfg.remat_mode in ("block", "double")
+
+        def body(carry, xs, pattern=pattern):
+            h = carry
+            new_caches = []
+            for i, blk in enumerate(pattern):
+
+                def one(p_i, h_i, blk=blk):
+                    return B.block_seq(
+                        p_i, h_i, positions, cfg, blk,
+                        memory=memory, want_cache=want_cache,
+                        cache_len=cache_len,
+                    )
+
+                fn = jax.checkpoint(one) if per_block else one
+                h, c = fn(xs[i], h)
+                new_caches.append(c)
+            return h, tuple(new_caches) if want_cache else None
+
+        outer = cfg.remat and cfg.remat_mode in ("pattern", "double")
+        body_fn = jax.checkpoint(body) if outer else body
+        x, group_cache = jax.lax.scan(body_fn, x, tuple(gp))
+        caches.append(group_cache)
+    return x, caches
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["unembed"], x, jnp.float32)
+    return L.softcap(logits, cfg.logit_softcap)
+
+
+def _embed_tokens(params, cfg, tokens):
+    x = L.embed(params["embed"], tokens, _adt(cfg))
+    return x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+
+
+def _encode(params, cfg, frames):
+    """Encoder stack (seamless): frames (B, Sa, enc_input_dim) -> memory."""
+    x = L.dense(params["enc_proj"], frames.astype(_adt(cfg)))
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _ = _run_groups(
+        params["enc_groups"], x, pos, cfg, cfg.encoder_groups
+    )
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _memory(params, cfg, batch):
+    if cfg.encoder_groups is not None:
+        return _encode(params, cfg, batch["frames"])
+    if cfg.vision_tokens:
+        return L.dense(params["vision_proj"], batch["patches"].astype(_adt(cfg)))
+    return None
+
+
+def _backbone(params, batch, cfg):
+    tokens = batch["tokens"]
+    memory = _memory(params, cfg, batch)
+    x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _ = _run_groups(params["groups"], x, positions, cfg, cfg.groups, memory=memory)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward_train(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """batch: {"tokens": (B,S) int32, "labels": (B,S) int32, [frames|patches]}.
+
+    Returns (mean CE loss, logits fp32).  Materializes logits -- use
+    ``forward_loss`` in the training step (streaming CE, no logits).
+    """
+    x = _backbone(params, batch, cfg)
+    logits = _logits(params, cfg, x)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, logits
+
+
+def forward_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Training loss via streaming (vocab-chunked) cross-entropy: the
+    (B, S, vocab) logits are never materialized (65 GB/device at gemma3's
+    train_4k shape otherwise -- see EXPERIMENTS.md #Perf iteration 1)."""
+    x = _backbone(params, batch, cfg)
+    if cfg.ce_chunk <= 0:
+        loss, _ = forward_train(params, batch, cfg)  # pragma: no cover
+        return loss
+    if cfg.tie_embeddings:
+        return L.blocked_cross_entropy(
+            x, batch["labels"], table=params["embed"]["table"],
+            chunk=cfg.ce_chunk, logit_softcap=cfg.logit_softcap,
+        )
+    return L.blocked_cross_entropy(
+        x, batch["labels"], w=params["unembed"]["w"],
+        bias=params["unembed"].get("b"),
+        chunk=cfg.ce_chunk, logit_softcap=cfg.logit_softcap,
+    )
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Run the context and build decode caches.
+
+    Returns (last-position logits (B, vocab), caches, memory).
+    """
+    tokens = batch["tokens"]
+    memory = _memory(params, cfg, batch)
+    x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, caches = _run_groups(
+        params["groups"], x, positions, cfg, cfg.groups,
+        memory=memory, want_cache=True, cache_len=cache_len,
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, -1])
+    return logits, caches, memory
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    """Zero caches matching prefill's structure (for dry-run decode)."""
+    dtype = _adt(cfg)
+    caches = []
+    for pattern, repeat in cfg.groups:
+        per_pos = []
+        for blk in pattern:
+            one = B.block_init_cache(cfg, blk, batch, cache_len, dtype)
+            per_pos.append(
+                jax.tree.map(lambda a: jnp.broadcast_to(a[None], (repeat,) + a.shape), one)
+            )
+        caches.append(tuple(per_pos))
+    return caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig, *, memory=None):
+    """token: (B,) int32; pos: scalar int32. Returns (logits, new caches)."""
+    x = _embed_tokens(params, cfg, token[:, None])
+    new_caches = []
+    for gp, gc, (pattern, repeat) in zip(params["groups"], caches, cfg.groups):
+
+        def body(carry, xs, pattern=pattern):
+            h = carry
+            p_slices, c_slices = xs
+            outs = []
+            for i, blk in enumerate(pattern):
+                h, c = B.block_step(
+                    p_slices[i], h, c_slices[i], pos, cfg, blk, memory=memory
+                )
+                outs.append(c)
+            return h, tuple(outs)
+
+        x, gc_new = jax.lax.scan(body, x, (tuple(gp), gc))
+        new_caches.append(gc_new)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, 0])
+    return logits, new_caches
+
+
+# ------------------------------------------------------------- counting ----
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    params = abstract_params(cfg)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        moe_layers = sum(
+            sum(1 for b in pattern if b.moe) * repeat for pattern, repeat in cfg.groups
+        )
+        per_expert = 3 * cfg.d_model * m.expert_ff
+        total -= (m.num_experts - m.top_k) * per_expert * moe_layers
+    return total

@@ -1,0 +1,332 @@
+"""Recurrent sequence mixers: RG-LRU (RecurrentGemma/Griffin) and xLSTM cells.
+
+All three expose a *sequence* form (train/prefill; O(S) or chunkwise-parallel,
+TPU-friendly) and a *step* form (decode; O(1) state) sharing the same state
+pytree -- this is what makes the long_500k decode shape constant-memory for
+the hybrid/ssm architectures (DESIGN.md #3).
+
+  * RG-LRU: diagonal gated linear recurrence; sequence form uses
+    ``jax.lax.associative_scan`` (log-depth on TPU).
+  * mLSTM: matrix-memory LSTM; sequence form is chunkwise-parallel with
+    running-max stabilization of the exponential gates (intra-chunk quadratic
+    on the MXU, inter-chunk recurrent state).
+  * sLSTM: scalar-memory LSTM with per-head recurrent weights; inherently
+    sequential -> lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+# ======================================================= RG-LRU (Griffin) ==
+
+
+def rglru_init(key, d_rnn: int, dtype):
+    ka, kx, kl = jax.random.split(key, 3)
+    return {
+        "wa": L.dense_init(ka, d_rnn, d_rnn, dtype),
+        "wx": L.dense_init(kx, d_rnn, d_rnn, dtype),
+        # lambda init so decay a = exp(-8 softplus(lam) r) ~ 0.9..0.99
+        "lam": jax.random.uniform(kl, (d_rnn,), jnp.float32, -4.6, -3.0),
+    }
+
+
+def _rglru_gates(p, x):
+    r = jax.nn.sigmoid(L.dense(p["wa"], x, jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["wx"], x, jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (Griffin eq. 4)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_seq(p, x, h0=None):
+    """x: (B, S, d_rnn) -> (y (B,S,d_rnn), h_last (B,d_rnn)).  h_t = a h + b."""
+    a, b = _rglru_gates(p, x)
+
+    def comb(c1, c2):  # c1 earlier, c2 later
+        return (c1[0] * c2[0], c2[0] * c1[1] + c2[1])
+
+    a_s, b_s = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h = b_s
+    if h0 is not None:
+        h = h + a_s * h0[:, None, :].astype(jnp.float32)
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(p, x1, h):
+    """x1: (B, 1, d_rnn), h: (B, d_rnn) -> (y (B,1,d), h_new)."""
+    a, b = _rglru_gates(p, x1)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x1.dtype)[:, None, :], h_new
+
+
+def conv1d_init(key, width: int, d: int, dtype):
+    return {
+        "w": (jax.random.normal(key, (width, d), jnp.float32) / np.sqrt(width)).astype(dtype),
+        "b": jnp.zeros((d,), dtype),
+    }
+
+
+def conv1d_seq(p, x):
+    """Causal depthwise conv, width w. x: (B, S, d)."""
+    w = p["w"].shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(w):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * p["w"][w - 1 - i].astype(jnp.float32)
+    return (out + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(p, x1, hist):
+    """x1: (B,1,d); hist: (B, w-1, d) previous inputs -> (y, new_hist)."""
+    w = p["w"].shape[0]
+    seq = jnp.concatenate([hist, x1.astype(hist.dtype)], axis=1)  # (B, w, d)
+    y = jnp.einsum(
+        "bwd,wd->bd", seq.astype(jnp.float32), p["w"].astype(jnp.float32)
+    ) + p["b"].astype(jnp.float32)
+    return y.astype(x1.dtype)[:, None], seq[:, 1:]
+
+
+def recurrent_block_init(key, d_model: int, d_rnn: int, conv_width: int, dtype):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "win1": L.dense_init(k1, d_model, d_rnn, dtype),
+        "win2": L.dense_init(k2, d_model, d_rnn, dtype),
+        "conv": conv1d_init(k3, conv_width, d_rnn, dtype),
+        "rglru": rglru_init(k4, d_rnn, dtype),
+        "wout": L.dense_init(k5, d_rnn, d_model, dtype),
+    }
+
+
+def recurrent_block_seq(p, x, state=None):
+    """Griffin recurrent block, sequence form. x: (B,S,D)."""
+    b1 = L.dense(p["win1"], x)
+    gate = jax.nn.gelu(L.dense(p["win2"], x, jnp.float32)).astype(x.dtype)
+    c = conv1d_seq(p["conv"], b1)
+    h0 = state["h"] if state is not None else None
+    y, h_last = rglru_seq(p["rglru"], c, h0)
+    out = L.dense(p["wout"], y * gate)
+    new_state = {
+        "h": h_last,
+        "conv": b1[:, -(p["conv"]["w"].shape[0] - 1):].astype(x.dtype),
+    }
+    return out, new_state
+
+
+def recurrent_block_step(p, x1, state):
+    b1 = L.dense(p["win1"], x1)
+    gate = jax.nn.gelu(L.dense(p["win2"], x1, jnp.float32)).astype(x1.dtype)
+    c, conv_hist = conv1d_step(p["conv"], b1, state["conv"])
+    y, h = rglru_step(p["rglru"], c, state["h"])
+    out = L.dense(p["wout"], y * gate)
+    return out, {"h": h, "conv": conv_hist}
+
+
+def recurrent_block_init_state(batch: int, d_rnn: int, conv_width: int, dtype):
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    }
+
+
+# ================================================================ mLSTM ====
+
+
+def mlstm_init(key, d_model: int, num_heads: int, d_inner: int, dtype):
+    kq, kk, kv, ki, kf, ko, kp, kn = jax.random.split(key, 8)
+    return {
+        "wq": L.dense_init(kq, d_model, d_inner, dtype),
+        "wk": L.dense_init(kk, d_model, d_inner, dtype),
+        "wv": L.dense_init(kv, d_model, d_inner, dtype),
+        "wi": L.dense_init(ki, d_model, num_heads, dtype, bias=True),
+        "wf": L.dense_init(kf, d_model, num_heads, dtype, bias=True),
+        "wog": L.dense_init(ko, d_model, d_inner, dtype),
+        "norm": L.rmsnorm_init(d_inner, dtype),
+        "wout": L.dense_init(kp, d_inner, d_model, dtype),
+    }
+
+
+def _mlstm_qkv(p, x, num_heads):
+    b, s, _ = x.shape
+    dh = p["wq"]["w"].shape[1] // num_heads
+    q = L.dense(p["wq"], x, jnp.float32).reshape(b, s, num_heads, dh).transpose(0, 2, 1, 3)
+    k = L.dense(p["wk"], x, jnp.float32).reshape(b, s, num_heads, dh).transpose(0, 2, 1, 3)
+    v = L.dense(p["wv"], x, jnp.float32).reshape(b, s, num_heads, dh).transpose(0, 2, 1, 3)
+    li = L.dense(p["wi"], x, jnp.float32).transpose(0, 2, 1)            # (B,H,S) log input gate
+    lf = jax.nn.log_sigmoid(L.dense(p["wf"], x, jnp.float32)).transpose(0, 2, 1)
+    return q, k / np.sqrt(dh), v, li, lf
+
+
+def mlstm_seq(p, x, num_heads: int, state=None, chunk: int = 128):
+    """Chunkwise-parallel mLSTM. x: (B,S,D) -> (y, state).
+
+    State: C (B,H,dk,dv), n (B,H,dk), m (B,H) with C, n stored descaled by
+    exp(m) (running-max stabilization of the exponential gates).
+    """
+    b, s, _ = x.shape
+    q, k, v, li, lf = _mlstm_qkv(p, x, num_heads)
+    h_heads = num_heads
+    dh = q.shape[-1]
+    t = min(chunk, s)
+    pad = (-s) % t
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0))) for a in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    nc = (s + pad) // t
+
+    def split(a):  # (B,H,S,*) -> (nc, B,H,t,*)
+        return a.reshape(b, h_heads, nc, t, *a.shape[3:]).transpose(2, 0, 1, 3, *range(4, a.ndim + 1))
+
+    qs, ks, vs = split(q), split(k), split(v)
+    lis = li.reshape(b, h_heads, nc, t).transpose(2, 0, 1, 3)
+    lfs = lf.reshape(b, h_heads, nc, t).transpose(2, 0, 1, 3)
+
+    if state is None:
+        c0 = jnp.zeros((b, h_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h_heads, dh), jnp.float32)
+        m0 = jnp.full((b, h_heads), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state["C"], state["n"], state["m"]
+
+    tri = jnp.tril(jnp.ones((t, t), bool))
+
+    def chunk_step(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, lfc = xs                       # (B,H,t,dh) / (B,H,t)
+        lcum = jnp.cumsum(lfc, axis=-1)                 # L_t
+        ltot = lcum[..., -1:]                           # L_T
+        # intra-chunk log weights D_ts = L_t - L_s + i_s (s <= t)
+        dmat = lcum[..., :, None] - lcum[..., None, :] + lic[..., None, :]
+        dmat = jnp.where(tri[None, None], dmat, -1e30)
+        m_intra = dmat.max(axis=-1)                     # (B,H,t)
+        m_comb = jnp.maximum(m_intra, m_prev[..., None] + lcum)
+        sc = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * jnp.exp(
+            dmat - m_comb[..., None]
+        )
+        inter_scale = jnp.exp(m_prev[..., None] + lcum - m_comb)      # (B,H,t)
+        num = jnp.einsum("bhts,bhsd->bhtd", sc, vc) + jnp.einsum(
+            "bhtd,bhdv->bhtv", qc, c_prev
+        ) * inter_scale[..., None]
+        # q.n_t = sum_s (q.k_s) exp(D_ts - m) = row-sum of sc (k is pre-scaled)
+        den = jnp.abs(
+            sc.sum(axis=-1)
+            + jnp.einsum("bhtd,bhd->bht", qc, n_prev) * inter_scale
+        )
+        h = num / jnp.maximum(den, jnp.exp(-m_comb))[..., None]
+        # state to chunk end
+        a_log = ltot - lcum + lic                       # decay t..T + input gate
+        m_new = jnp.maximum(m_prev + ltot[..., 0], a_log.max(axis=-1))
+        w = jnp.exp(a_log - m_new[..., None])           # (B,H,t)
+        c_new = c_prev * jnp.exp(m_prev + ltot[..., 0] - m_new)[..., None, None] + jnp.einsum(
+            "bht,bhtd,bhtv->bhdv", w, kc, vc
+        )
+        n_new = n_prev * jnp.exp(m_prev + ltot[..., 0] - m_new)[..., None] + jnp.einsum(
+            "bht,bhtd->bhd", w, kc
+        )
+        return (c_new, n_new, m_new), h
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_step, (c0, n0, m0), (qs, ks, vs, lis, lfs)
+    )
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, h_heads, nc * t, dh)[:, :, :s]
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, h_heads * dh)
+    og = jax.nn.sigmoid(L.dense(p["wog"], x, jnp.float32))
+    y = L.rmsnorm(p["norm"], (h * og).astype(x.dtype))
+    return L.dense(p["wout"], y), {"C": c_f, "n": n_f, "m": m_f}
+
+
+def mlstm_step(p, x1, state, num_heads: int):
+    """One-token mLSTM. x1: (B,1,D)."""
+    q, k, v, li, lf = _mlstm_qkv(p, x1, num_heads)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]        # (B,H,dh)
+    li, lf = li[:, :, 0], lf[:, :, 0]                   # (B,H)
+    c, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    is_ = jnp.exp(li - m_new)
+    c_new = c * fs[..., None, None] + is_[..., None, None] * jnp.einsum(
+        "bhd,bhv->bhdv", k, v
+    )
+    n_new = n * fs[..., None] + is_[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(x1.shape[0], 1, -1)
+    og = jax.nn.sigmoid(L.dense(p["wog"], x1, jnp.float32))
+    y = L.rmsnorm(p["norm"], (h * og).astype(x1.dtype))
+    return L.dense(p["wout"], y), {"C": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_init_state(batch: int, num_heads: int, dh: int):
+    return {
+        "C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, jnp.float32),
+    }
+
+
+# ================================================================ sLSTM ====
+
+
+def slstm_init(key, d_model: int, num_heads: int, dtype):
+    dh = d_model // num_heads
+    kw, kr, ko = jax.random.split(key, 3)
+    return {
+        "wzifo": L.dense_init(kw, d_model, 4 * d_model, dtype, bias=True),
+        # per-head recurrent weights for z,i,f,o: (4, H, dh, dh)
+        "r": (jax.random.normal(kr, (4, num_heads, dh, dh), jnp.float32) / np.sqrt(dh)).astype(dtype),
+        "norm": L.rmsnorm_init(d_model, dtype),
+        "wout": L.dense_init(ko, d_model, d_model, dtype),
+    }
+
+
+def slstm_seq(p, x, num_heads: int, state=None):
+    """Sequential sLSTM via lax.scan. x: (B,S,D)."""
+    b, s, d = x.shape
+    dh = d // num_heads
+    pre = L.dense(p["wzifo"], x, jnp.float32)            # (B,S,4D)
+    pre = pre.reshape(b, s, 4, num_heads, dh).transpose(1, 0, 2, 3, 4)  # (S,B,4,H,dh)
+    r = p["r"].astype(jnp.float32)
+
+    if state is None:
+        state = slstm_init_state(b, num_heads, dh)
+    init = (state["c"], state["n"], state["m"], state["h"])
+
+    def step(carry, xt):
+        c, n, m, h = carry                               # (B,H,dh) each
+        rec = jnp.einsum("bhd,ghde->gbhe", h, r)         # (4,B,H,dh)
+        z = jnp.tanh(xt[:, 0] + rec[0])
+        li = xt[:, 1] + rec[1]                           # log input gate
+        lf = jax.nn.log_sigmoid(xt[:, 2] + rec[2])       # log forget gate
+        o = jax.nn.sigmoid(xt[:, 3] + rec[3])
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c_new = f_ * c + i_ * z
+        n_new = f_ * n + i_
+        h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), ys = jax.lax.scan(step, init, pre)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y)
+    return L.dense(p["wout"], y), {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_step(p, x1, state, num_heads: int):
+    y, new_state = slstm_seq(p, x1, num_heads, state)
+    return y, new_state
+
+
+def slstm_init_state(batch: int, num_heads: int, dh: int):
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, num_heads, dh), -1e30, jnp.float32), "h": z}

@@ -1,0 +1,2 @@
+from repro.roofline.hlo import parse_hlo_module, HloCosts  # noqa: F401
+from repro.roofline.analysis import roofline_terms, RooflineReport, V5E  # noqa: F401

@@ -1,0 +1,178 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e target).
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+  memory term     = HLO_bytes_per_chip / HBM_bw              [s]
+  collective term = wire_bytes_per_chip / link_bw            [s]
+
+HLO_FLOPs/bytes come from the trip-count-aware HLO parser (repro.roofline.hlo)
+-- the per-partition module IS the per-chip program.  The dominant term is the
+bottleneck; roofline fraction = compute_term / max(all terms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline.hlo import HloCosts, parse_hlo_module
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float        # per chip
+    hbm_bw: float            # bytes/s per chip
+    link_bw: float           # bytes/s per ICI link
+
+
+V5E = HwSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float             # 6*N*D (or 6*N_active*D) GLOBAL
+    xla_flops_raw: Optional[float] = None   # cost_analysis (scan-undercounted)
+    xla_bytes_raw: Optional[float] = None
+    collective_by_type: Dict[str, float] = dataclasses.field(default_factory=dict)
+    temp_bytes: Optional[float] = None      # memory_analysis temp size
+    arg_bytes: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak: compute term / bottleneck term."""
+        t = self.step_time_s
+        return self.compute_s / t if t else 0.0
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        t = self.step_time_s
+        if not t:
+            return 0.0
+        return self.model_flops / (self.chips * t) / V5E.peak_flops
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(
+            dominant=self.dominant,
+            step_time_s=self.step_time_s,
+            roofline_fraction=self.roofline_fraction,
+            useful_flops_fraction=self.useful_flops_fraction,
+            mfu=self.mfu,
+        )
+        return d
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_desc: str,
+    chips: int,
+    hlo_text: str,
+    model_flops: float,
+    cost_analysis: Optional[dict] = None,
+    memory_analysis=None,
+    hw: HwSpec = V5E,
+) -> RooflineReport:
+    costs: HloCosts = parse_hlo_module(hlo_text)
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_desc,
+        chips=chips,
+        flops_per_chip=costs.dot_flops,
+        hbm_bytes_per_chip=costs.hbm_bytes,
+        wire_bytes_per_chip=costs.collective_wire_bytes,
+        compute_s=costs.dot_flops / hw.peak_flops,
+        memory_s=costs.hbm_bytes / hw.hbm_bw,
+        collective_s=costs.collective_wire_bytes / hw.link_bw,
+        model_flops=model_flops,
+        xla_flops_raw=(cost_analysis or {}).get("flops"),
+        xla_bytes_raw=(cost_analysis or {}).get("bytes accessed"),
+        collective_by_type=dict(costs.collective_by_type),
+        temp_bytes=getattr(memory_analysis, "temp_size_in_bytes", None),
+        arg_bytes=getattr(memory_analysis, "argument_size_in_bytes", None),
+    )
+
+
+def model_flops_train(cfg, batch: int, seq: int) -> float:
+    """6*N*D with N = active params; + attention score/value FLOPs."""
+    n_active = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    base = 6.0 * n_active * batch * seq
+    return base + batch * _attention_flops(cfg, seq, train=True)
+
+
+def model_flops_decode(cfg, batch: int, context: int) -> float:
+    """Per decode step: 2*N_active*B (fwd only) + attention over the cache."""
+    n_active = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    base = 2.0 * n_active * batch
+    return base + _attention_flops_decode(cfg, batch, context)
+
+
+def model_flops_prefill(cfg, batch: int, seq: int) -> float:
+    n_active = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    return 2.0 * n_active * batch * seq + batch * _attention_flops(cfg, seq, train=False)
+
+
+def _per_layer_attn_flops(cfg, q_len: int, k_len: int, fwdbwd: float) -> float:
+    if cfg.mla is not None:
+        dqk = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        dv = cfg.mla.v_head_dim
+    else:
+        dqk = dv = cfg.head_dim_
+    return fwdbwd * 2.0 * cfg.num_heads * q_len * k_len * (dqk + dv)
+
+
+def _attention_flops(cfg, seq: int, train: bool) -> float:
+    """Per-sequence causal score+value FLOPs across layers (windows clip k)."""
+    fwdbwd = 3.0 if train else 1.0
+    total = 0.0
+    for pattern, repeat in cfg.groups:
+        for blk in pattern:
+            if blk.kind != "attn":
+                continue
+            # average causal k_len; local windows cap it
+            avg_k = seq / 2.0 if blk.window <= 0 else min(blk.window, seq / 2.0)
+            total += repeat * _per_layer_attn_flops(cfg, seq, avg_k, fwdbwd)
+    return total
+
+
+def _attention_flops_decode(cfg, batch: int, context: int) -> float:
+    total = 0.0
+    for pattern, repeat in cfg.groups:
+        for blk in pattern:
+            if blk.kind != "attn":
+                continue
+            k_len = min(blk.window, context) if blk.window > 0 else context
+            total += repeat * batch * _per_layer_attn_flops(cfg, 1, k_len, 1.0)
+    return total

@@ -1,0 +1,396 @@
+"""Post-SPMD HLO text analysis with while-loop trip-count propagation.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so for scanned
+layer stacks it undercounts FLOPs/bytes by the trip count (verified
+empirically, see EXPERIMENTS.md #Dry-run).  This module parses
+``compiled.as_text()`` (per-partition HLO) and:
+
+  * multiplies every computation's cost by its execution multiplicity
+    (ENTRY=1; while body/cond inherit caller_mult x trip_count, where the
+    trip count is recovered from the loop-condition constant -- scan always
+    lowers to a counted loop);
+  * FLOPs: 2 * prod(result_dims) * prod(contracted lhs dims) per ``dot``
+    (+ convolutions), including dots inside fusion computations -- MXU work;
+  * HBM bytes: per top-level op, operand + result bytes (fusion internals
+    excluded: they live in registers/VMEM);
+  * collectives: tensor bytes and ring wire bytes per op type with the group
+    size parsed from ``replica_groups=[G,S]<=[N]``:
+        all-reduce      2 x bytes x (S-1)/S
+        all-gather      result_bytes x (S-1)/S
+        reduce-scatter  operand_bytes x (S-1)/S
+        all-to-all      bytes x (S-1)/S
+        collective-permute  bytes
+
+All numbers are PER PARTITION (the module is the per-device program), which
+is what the per-chip roofline needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: Dict[str, _Op]
+    order: List[str]
+    root: Optional[str] = None
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_tensor_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_by_type: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int)
+    )
+    bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    num_while_loops: int = 0
+
+    def as_dict(self):
+        return {
+            "dot_flops": self.dot_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_tensor_bytes": self.collective_tensor_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_by_type": dict(self.collective_by_type),
+            "collective_count": dict(self.collective_count),
+            "bytes_by_op": dict(self.bytes_by_op),
+            "num_while_loops": self.num_while_loops,
+        }
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{") and "->" in line:
+                cur = _Computation(m.group(1), {}, [])
+                if line.startswith("ENTRY"):
+                    entry_name = m.group(1)
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rest = m.groups()
+            # result type: balanced-paren tuple or a single token
+            rest = rest.strip()
+            if rest.startswith("("):
+                depth0 = 0
+                tend = 0
+                for i, ch in enumerate(rest):
+                    if ch == "(":
+                        depth0 += 1
+                    elif ch == ")":
+                        depth0 -= 1
+                        if depth0 == 0:
+                            tend = i
+                            break
+                rtype = rest[: tend + 1]
+                remainder = rest[tend + 1 :].strip()
+            else:
+                sm = re.match(r"(\S+)\s+", rest)
+                if not sm:
+                    continue
+                rtype = sm.group(1)
+                remainder = rest[sm.end() :]
+            om = re.match(r"([\w\-]+)\(", remainder)
+            if not om:
+                continue
+            opcode = om.group(1)
+            paren = remainder[om.end() - 1 :]
+            # operands: %refs within the first balanced paren group
+            depth = 0
+            end = 0
+            for i, ch in enumerate(paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_str = paren[1:end]
+            attrs = paren[end + 1 :]
+            operands = re.findall(r"%([\w.\-]+)", operand_str)
+            cur.ops[name] = _Op(name, opcode, rtype, operands, attrs, line)
+            cur.order.append(name)
+            if line.lstrip().startswith("ROOT"):
+                cur.root = name
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(comp: _Computation) -> int:
+    """Largest integer constant in a loop-condition computation."""
+    best = 1
+    for op in comp.ops.values():
+        for m in re.finditer(r"constant\((\d+)\)", op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_type(comp: _Computation, ref: str) -> str:
+    op = comp.ops.get(ref)
+    return op.result_type if op else ""
+
+
+def _dot_flops(comp: _Computation, op: _Op) -> float:
+    res = _shape_dims(op.result_type)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    out = 1.0
+    for d in rdims:
+        out *= d
+    lhs_t = _operand_type(comp, op.operands[0]) if op.operands else ""
+    lhs = _shape_dims(lhs_t)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contracted = 1.0
+    if lhs and cm and cm.group(1):
+        _, ldims = lhs
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(ldims):
+                contracted *= ldims[ci]
+    return 2.0 * out * contracted
+
+
+def _conv_flops(comp: _Computation, op: _Op) -> float:
+    res = _shape_dims(op.result_type)
+    rhs = _shape_dims(_operand_type(comp, op.operands[1])) if len(op.operands) > 1 else None
+    if res is None or rhs is None:
+        return 0.0
+    out = 1.0
+    for d in res[1]:
+        out *= d
+    ker = 1.0
+    for d in rhs[1][:-1]:  # kernel spatial x in-channels (approx)
+        ker *= d
+    return 2.0 * out * ker
+
+
+# HBM-traffic model: only ops that materialize buffers on the TPU target
+# count traffic.  Raw elementwise/convert/broadcast/select/compare at the HLO
+# top level exist because the CPU backend fuses less than the TPU backend --
+# on TPU they fuse into neighbours, so counting them would double-charge
+# (verified: with them included, bytes exceed XLA's own estimate by >100x).
+_BYTES_OPS = {
+    "dot", "convolution", "fusion", "custom-call", "copy", "copy-start",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "reduce", "reduce-window", "select-and-scatter", "sort", "transpose",
+    "pad", "concatenate", "slice", "iota", "rng", "cholesky",
+    "triangular-solve", "fft",
+} | set(COLLECTIVES)
+
+
+def _fusion_root_op(comps, op: _Op) -> Optional[_Op]:
+    cm = re.search(r"calls=%([\w.\-]+)", op.line)
+    if not cm:
+        return None
+    called = comps.get(cm.group(1))
+    if called is None or called.root is None:
+        return None
+    tgt = called.ops.get(called.root)
+    hops = 0
+    while (
+        tgt is not None
+        and tgt.opcode in ("bitcast", "copy", "convert", "reshape", "transpose")
+        and tgt.operands
+        and hops < 4
+    ):
+        tgt = called.ops.get(tgt.operands[0])
+        hops += 1
+    return tgt
+
+
+def _op_traffic(comp, comps, op: _Op, rbytes: int, obytes: int) -> float:
+    """HBM traffic model per op (TPU semantics).
+
+    Slicing-style access (dynamic-slice/gather, or fusions rooted in one --
+    the pattern scan uses to read one layer's params/cache from the stacked
+    buffer) touches only the slice, not the whole buffer.  In-place updates
+    (dynamic-update-slice / scatter roots) touch only the update.  Everything
+    else: operands read + result written.  Heuristic: a fusion that computes
+    on a large operand *before* slicing is undercounted -- rare in practice
+    (XLA hoists such compute out of the slice fusion).
+    """
+    oc = op.opcode
+    if oc in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * rbytes
+    if oc == "dynamic-update-slice":
+        upd = _shape_bytes(_operand_type(comp, op.operands[1])) if len(op.operands) > 1 else 0
+        return 2.0 * upd
+    if oc == "fusion":
+        root = _fusion_root_op(comps, op)
+        if root is not None:
+            small = [
+                _shape_bytes(_operand_type(comp, r)) for r in op.operands
+            ]
+            if root.opcode == "dynamic-update-slice":
+                # aliased big buffer: charge non-aliased operands twice
+                return 2.0 * sum(b for b in small if b != rbytes)
+            if root.opcode in ("dynamic-slice", "gather", "slice"):
+                # slice read+write + operands no larger than the slice
+                return 2.0 * rbytes + sum(b for b in small if b <= rbytes)
+            if root.opcode in ("scatter",):
+                # touched rows ~ updates; skip the big aliased table
+                return 3.0 * sum(b for b in small if b < rbytes)
+    return float(rbytes + obytes)
+
+
+def parse_hlo_module(text: str) -> HloCosts:
+    comps = _split_computations(text)
+    entry = comps.get("__entry__")
+    costs = HloCosts()
+    if entry is None:
+        return costs
+
+    # multiplicity propagation (DFS from entry; while bodies multiply)
+    mult: Dict[str, float] = defaultdict(float)
+    flop_mult: Dict[str, float] = defaultdict(float)  # includes fusion bodies
+    stack: List[Tuple[str, float, bool]] = [(entry.name, 1.0, True)]
+    seen_pairs = set()
+    while stack:
+        cname, m, top_level = stack.pop()
+        key = (cname, m, top_level)
+        if key in seen_pairs or cname not in comps:
+            continue
+        seen_pairs.add(key)
+        comp = comps[cname]
+        if top_level:
+            mult[cname] += m
+        flop_mult[cname] += m
+        for op in comp.ops.values():
+            if op.opcode == "while":
+                bm = re.search(r"body=%([\w.\-]+)", op.line)
+                cm = re.search(r"condition=%([\w.\-]+)", op.line)
+                trips = _trip_count(comps[cm.group(1)]) if cm and cm.group(1) in comps else 1
+                costs.num_while_loops += 1
+                if bm and bm.group(1) in comps:
+                    stack.append((bm.group(1), m * trips, True))
+                if cm and cm.group(1) in comps:
+                    stack.append((cm.group(1), m * trips, True))
+            elif op.opcode in ("fusion", "reduce", "map", "scatter", "select-and-scatter", "sort", "custom-call", "reduce-window"):
+                for ref in _CALL_ATTR_RE.findall(op.line):
+                    if ref in comps:
+                        stack.append((ref, m, False))
+            elif op.opcode in ("call", "conditional"):
+                for ref in _CALL_ATTR_RE.findall(op.line) + op.operands:
+                    if ref in comps:
+                        stack.append((ref, m, True))
+
+    # cost accumulation
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        fm = flop_mult.get(cname, 0.0)
+        tm = mult.get(cname, 0.0)
+        if fm == 0.0 and tm == 0.0:
+            continue
+        for op in comp.ops.values():
+            if op.opcode == "dot" and fm:
+                costs.dot_flops += fm * _dot_flops(comp, op)
+            elif op.opcode == "convolution" and fm:
+                costs.dot_flops += fm * _conv_flops(comp, op)
+            if not tm or op.opcode not in _BYTES_OPS:
+                continue
+            rbytes = _shape_bytes(op.result_type)
+            obytes = sum(
+                _shape_bytes(_operand_type(comp, r)) for r in op.operands
+            )
+            traffic = tm * _op_traffic(comp, comps, op, rbytes, obytes)
+            costs.hbm_bytes += traffic
+            costs.bytes_by_op[op.opcode] += traffic
+            if op.opcode in COLLECTIVES:
+                gm = _GROUPS_RE.search(op.line)
+                if gm:
+                    gsize = int(gm.group(2))
+                else:
+                    gm2 = _GROUPS_OLD_RE.search(op.line)
+                    gsize = len(gm2.group(1).split(",")) if gm2 else 2
+                frac = (gsize - 1) / gsize if gsize > 1 else 0.0
+                if op.opcode == "all-reduce":
+                    wire = 2.0 * rbytes * frac
+                elif op.opcode == "all-gather":
+                    wire = rbytes * frac
+                elif op.opcode == "reduce-scatter":
+                    wire = obytes * frac
+                elif op.opcode == "all-to-all":
+                    wire = rbytes * frac
+                else:  # collective-permute
+                    wire = rbytes
+                costs.collective_tensor_bytes += tm * rbytes
+                costs.collective_wire_bytes += tm * wire
+                costs.collective_by_type[op.opcode] += tm * wire
+                costs.collective_count[op.opcode] += int(tm)
+    return costs

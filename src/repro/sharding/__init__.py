@@ -1,0 +1,6 @@
+from repro.sharding.rules import (  # noqa: F401
+    param_specs,
+    cache_specs,
+    batch_spec,
+    dp_axes,
+)

@@ -1,0 +1,169 @@
+"""PartitionSpec rules: DP over ("pod","data"), TP/EP over "model".
+
+Baseline sharding (hillclimbed variants live in launch/dryrun overrides):
+
+  * embeddings/unembed: vocab over "model"
+  * attention/MLP in-projections: output features over "model"
+  * out-projections: input features over "model"
+  * MoE expert stacks: expert axis over "model" (expert parallelism)
+  * FSDP (>=236B configs): the remaining large dim over "data"
+    (params+optimizer state sharded; gathered per layer by GSPMD)
+  * KV caches: head_dim over "model", batch over DP axes
+  * recurrent states: feature dim over "model", batch over DP
+
+Every rule is divisibility-guarded: a dim is only sharded if divisible by
+the mesh axis size (e.g. qwen2.5's 40 heads shard as the flattened 5120-wide
+head*dh dim, not the head count).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+    else:
+        size = mesh.shape[axis]
+    return size > 0 and n % size == 0
+
+
+def _guard(spec_axes, shape, mesh: Mesh) -> P:
+    """Drop any axis the dim size doesn't divide."""
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        out.append(ax if (ax is not None and _div(dim, mesh, ax)) else None)
+    return P(*out)
+
+
+# parameter-name classes
+_IN_PROJ = {
+    "wq", "wk", "wv", "wg", "wi", "wog", "wuq", "wukv", "wzifo",
+    "win1", "win2", "wa", "wx",
+}
+_OUT_PROJ = {"wo", "wout"}
+_REPLICATED = {"router", "wkr", "wdq", "wdkv", "xgate", "b", "lam"}
+
+
+def _leaf_spec(path: Tuple[str, ...], shape, mesh: Mesh, fsdp: bool,
+               stack_depth: int) -> P:
+    """path: dict keys from the root to this leaf (group indices removed)."""
+    fs = "data" if (fsdp and "data" in mesh.shape) else None
+    names = [p for p in path if isinstance(p, str)]
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    lead = (None,) * stack_depth
+    nd = len(shape) - stack_depth
+    body = shape[stack_depth:]
+
+    def make(*axes):
+        return _guard(lead + axes, shape, mesh)
+
+    if leaf in ("scale", "bias", "lam", "xgate") or parent in ("qnorm", "knorm", "norm", "ln1", "ln2", "lnx", "final_norm", "enc_norm", "kvnorm"):
+        # norm params: shard 1-D over model only if large (d_rnn/d_inner)
+        if nd == 1 and body[0] % max(mesh.shape.get("model", 1), 1) == 0 and body[0] >= 1024:
+            return make("model")
+        return P(*((None,) * len(shape)))
+    if leaf == "table":  # embedding (vocab, d)
+        return make("model", fs)
+    if parent == "unembed" and leaf == "w":
+        return make(fs, "model")
+    if parent == "router":
+        return P(*((None,) * len(shape)))
+    if leaf == "w" and parent in _IN_PROJ:
+        return make(fs, "model")
+    if leaf == "w" and parent in _OUT_PROJ:
+        return make("model", fs)
+    if leaf == "w" and parent in _REPLICATED:
+        return make(fs, None)
+    if leaf == "w" and parent == "conv":
+        return make(None, "model")
+    if leaf in ("wg", "wi") and nd == 3:   # MoE experts (E, d, f)
+        return make("model", fs, None)
+    if leaf == "wo" and nd == 3:           # MoE experts (E, f, d)
+        return make("model", None, fs)
+    if leaf == "r" and nd == 4:            # sLSTM recurrent (4, H, dh, dh)
+        return make(None, "model", None, None)
+    if leaf == "b":
+        return P(*((None,) * len(shape)))
+    # fallback: shard the largest dim over model if divisible
+    if nd >= 1:
+        body_axes: list = [None] * nd
+        big = max(range(nd), key=lambda i: body[i])
+        body_axes[big] = "model"
+        return make(*body_axes)
+    return P(*((None,) * len(shape)))
+
+
+def _stack_depth_of_path(path) -> int:
+    """Params under groups/<g>/<pos> are stacked with one leading repeat axis."""
+    keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+    return 1 if ("groups" in keys or "enc_groups" in keys) else 0
+
+
+def param_specs(params_tree, mesh: Mesh, fsdp: bool = False):
+    """Pytree of PartitionSpec matching ``params_tree``."""
+
+    def spec(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else p.idx if hasattr(p, "idx") else str(p)
+            for p in path
+        )
+        sd = _stack_depth_of_path(path)
+        return _leaf_spec(keys, leaf.shape, mesh, fsdp, sd)
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh):
+    """KV caches / recurrent states: batch over DP, features over model."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        shape = leaf.shape
+        # all stacked caches have a leading (repeat,) axis then batch
+        if name == "pos":
+            return P(*((None,) * len(shape)))
+        axes = [None] * len(shape)
+        if len(shape) >= 2:
+            axes[1] = dp if _div(shape[1], mesh, dp) else None
+        if len(shape) == 5:
+            # (repeat, B, S, KV, dh) attention cache: prefer KV-head sharding
+            # when divisible -- dh-sharding makes GSPMD reshard the cache to
+            # head layout every layer (EXPERIMENTS.md #Perf, decode addendum)
+            if _div(shape[3], mesh, "model"):
+                axes[3] = "model"
+            elif _div(shape[4], mesh, "model"):
+                axes[4] = "model"
+        elif len(shape) >= 3:
+            last = len(shape) - 1
+            axes[last] = "model" if _div(shape[last], mesh, "model") else None
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def batch_spec(batch_tree, mesh: Mesh):
+    """Input batches: leading batch dim over DP axes."""
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        axes = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and _div(leaf.shape[0], mesh, dp):
+            axes[0] = dp
+        return P(*axes)
+
+    return jax.tree_util.tree_map(spec, batch_tree)

@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping and configurable state dtype.
+
+State dtype bf16 for the >=236B configs (arctic, deepseek) so optimizer
+state fits HBM at pod scale (DESIGN.md #4); the update math always runs in
+fp32 (m/v are upcast per step), so bf16 state costs precision only in the
+rounding of the stored moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptHParams:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(hp: OptHParams, step):
+    """Linear warmup + cosine decay to 10%."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (s - hp.warmup_steps) / jnp.maximum(hp.total_steps - hp.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * frac)
+    return hp.lr * warm * cos
+
+
+def adamw_init(params, state_dtype: str = "float32"):
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params, grads, state, hp: OptHParams
+) -> Tuple[Any, Any, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    lr = schedule(hp, step)
+    b1c = 1.0 - hp.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - hp.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = hp.b1 * m.astype(jnp.float32) + (1 - hp.b1) * g32
+        v32 = hp.b2 * v.astype(jnp.float32) + (1 - hp.b2) * g32 * g32
+        update = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + hp.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + hp.weight_decay * p32)
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, new_state, metrics

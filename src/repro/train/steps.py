@@ -1,0 +1,54 @@
+"""Jittable train / prefill / serve steps (what the dry-run lowers).
+
+``make_train_step``: fwd + CE loss + bwd + clipped AdamW, donating params
+and optimizer state.  ``make_serve_step``: one decode token against the
+caches.  Gradient all-reduce runs in bf16 when the config's activation
+dtype is bf16 (gradient compression, DESIGN.md #4) -- the optimizer math
+upcasts to fp32 per update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward_loss
+from repro.train.optimizer import OptHParams, adamw_update
+
+
+def make_train_step(cfg, hp: OptHParams):
+    def loss_fn(params, batch):
+        return forward_loss(params, batch, cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if cfg.activation_dtype == "bfloat16":
+            # bf16 gradient all-reduce (compression); fp32 again in AdamW
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, hp)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill(cfg, cache_len: int):
+    from repro.models import prefill
+
+    def prefill_step(params, batch):
+        logits, caches, memory = prefill(params, batch, cfg, cache_len)
+        return logits, caches, memory
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, greedy: bool = True):
+    def serve_step(params, caches, token, pos, memory=None):
+        logits, caches = decode_step(params, caches, token, pos, cfg, memory=memory)
+        logits = logits[..., : cfg.vocab]
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, caches
+
+    return serve_step

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finite values (the assignment's smoke requirement),
+plus decode-vs-train logit consistency (cache/step math)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import (
+    count_params_analytic, decode_step, forward_train, init_params, prefill,
+)
+from repro.train import OptHParams, adamw_init, make_train_step
+
+
+def _batch(cfg, b=2, s=24, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    }
+    batch["labels"] = batch["tokens"]
+    if cfg.encoder_groups is not None:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, 16, cfg.enc_input_dim)), jnp.float32
+        )
+    if cfg.vision_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vision_tokens, cfg.vision_dim)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced_config(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    loss, logits = forward_train(params, batch, cfg)
+    assert logits.shape == (2, 24, cfg.vocab)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    step = make_train_step(cfg, OptHParams(warmup_steps=1, total_steps=10))
+    opt = adamw_init(params, cfg.opt_state_dtype)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(opt2["step"]) == 1
+    # params actually moved
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_consistent_with_train_forward(arch):
+    cfg = get_reduced_config(arch)
+    overrides = dict(activation_dtype="float32")
+    if cfg.moe is not None:  # avoid capacity drops (they legitimately differ)
+        overrides["moe"] = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    cfg = dataclasses.replace(cfg, **overrides)
+    params = init_params(cfg, jax.random.key(1))
+    b, s = 2, 24
+    batch = _batch(cfg, b, s, seed=3)
+    _, logits = forward_train(params, batch, cfg)
+    ctx = dict(batch)
+    ctx["tokens"] = batch["tokens"][:, : s - 1]
+    ctx["labels"] = ctx["tokens"]
+    _, caches, memory = prefill(params, ctx, cfg, cache_len=32)
+    lg, _ = decode_step(
+        params, caches, batch["tokens"][:, s - 1], jnp.int32(s - 1), cfg,
+        memory=memory,
+    )
+    ref = logits[:, s - 1]
+    rel = float(jnp.max(jnp.abs(lg - ref))) / float(jnp.max(jnp.abs(ref)))
+    assert rel < 5e-3, f"{arch}: decode/train mismatch rel={rel}"
+
+
+def test_published_param_counts_in_range():
+    """Analytic parameter counts must land near the published sizes."""
+    expected = {
+        "gemma3_12b": (10e9, 14e9),
+        "phi3_mini_3p8b": (3.5e9, 4.2e9),
+        "qwen3_32b": (30e9, 36e9),
+        "qwen2p5_32b": (30e9, 36e9),
+        "recurrentgemma_2b": (2.2e9, 3.3e9),
+        "arctic_480b": (430e9, 520e9),
+        "deepseek_v2_236b": (210e9, 260e9),
+        "seamless_m4t_medium": (0.45e9, 1.4e9),
+        "llama3p2_vision_11b": (9e9, 12e9),
+        "xlstm_125m": (0.1e9, 0.17e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = count_params_analytic(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params_much_smaller():
+    cfg = get_config("arctic_480b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()

@@ -1,0 +1,48 @@
+"""Ring self-join on 8 host devices (paper Sec. 6.3 -> ppermute).
+
+Runs in a subprocess because the 8-device XLA flag must be set before jax
+initializes (the main pytest process keeps the default 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np, jax
+    from repro.core.distributed import ring_self_join_counts, ring_comm_elements
+    from repro.core.brute import brute_counts
+    from repro.data import exponential_dataset
+
+    D = exponential_dataset(1003, 16, seed=5)   # non-divisible -> padding path
+    eps = 0.06
+    truth = brute_counts(D, eps)
+
+    mesh1 = jax.make_mesh((8,), ("data",))
+    c1 = ring_self_join_counts(D, eps, mesh1, "data", row_block=128)
+    assert np.array_equal(c1, truth), "1-axis ring mismatch"
+
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    c2 = ring_self_join_counts(D, eps, mesh2, ("pod", "data"), row_block=128)
+    assert np.array_equal(c2, truth), "2-axis (multi-pod) ring mismatch"
+
+    assert ring_comm_elements(1000, 8) == 7000   # (|p|-1)|D| (paper Sec. 6.3)
+    print("RING_OK")
+    """
+)
+
+
+def test_ring_self_join_8_devices():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src],
+        capture_output=True, text=True, timeout=600,
+        env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RING_OK" in out.stdout

@@ -1,0 +1,30 @@
+"""Multi-pod dry-run integration: one fast cell compiled in a subprocess
+(the 512-device flag must precede jax init, so this cannot run in-process).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def test_dryrun_single_cell_multipod():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    with tempfile.TemporaryDirectory() as out:
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "xlstm_125m", "--shape", "long_500k",
+             "--multi-pod", "--out", out],
+            capture_output=True, text=True, timeout=900,
+            env={**{k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+                 "PYTHONPATH": src},
+        )
+        assert res.returncode == 0, res.stdout[-1500:] + res.stderr[-1500:]
+        path = os.path.join(out, "xlstm_125m__long_500k__pod2.json")
+        with open(path) as f:
+            d = json.load(f)
+        assert d["chips"] == 512
+        assert d["compute_s"] >= 0 and d["memory_s"] > 0
+        assert d["dominant"] in ("compute", "memory", "collective")
+        # 512k-context decode state must be tiny (recurrent arch)
+        assert (d["temp_bytes_per_chip"] or 0) < 16e9

@@ -1,0 +1,42 @@
+"""Entity partitioning and scaling simulation (paper Sec. 6.2, Figs. 10-11)."""
+import numpy as np
+
+from repro.core.partition import assign_dynamic, make_partition, simulate_scaling
+
+
+def test_partition_covers_all_points():
+    p = make_partition(10_000, 8, 32)
+    assert p.batch_bounds[0] == 0 and p.batch_bounds[-1] == 10_000
+    assert (np.diff(p.batch_bounds) >= 0).all()
+    assert p.num_batches % p.num_workers == 0
+
+
+def test_round_robin_balanced():
+    p = make_partition(1_000, 4, 32)
+    per_worker = [len(p.batches_of(w)) for w in range(4)]
+    assert len(set(per_worker)) == 1  # N_b mod |p| == 0 (paper Sec. 6.2)
+
+
+def test_rounding_up_to_worker_multiple():
+    p = make_partition(1_000, 7, 30)
+    assert p.num_batches % 7 == 0 and p.num_batches >= 30
+
+
+def test_lpt_never_worse_than_round_robin():
+    rng = np.random.default_rng(0)
+    costs = rng.exponential(1.0, 64)
+    for workers in (2, 4, 8):
+        rr = max(
+            costs[np.arange(64) % workers == w].sum() for w in range(workers)
+        )
+        lpt_assign = assign_dynamic(costs, workers)
+        lpt = max(costs[lpt_assign == w].sum() for w in range(workers))
+        assert lpt <= rr + 1e-9
+
+
+def test_simulated_scaling_near_ideal_for_uniform_costs():
+    """Paper Fig. 11: entity partitioning -> near-ideal speedup."""
+    costs = np.full(128, 14.0)  # the paper's ~14 s batches (Fig. 10)
+    rows = simulate_scaling(costs, [1, 2, 4, 8, 16, 32])
+    for p, t, speedup in rows:
+        assert speedup > 0.95 * p

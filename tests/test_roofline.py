@@ -1,0 +1,106 @@
+"""HLO parser: exact dot FLOPs, while trip counts, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import parse_hlo_module
+from repro.roofline.analysis import roofline_terms, V5E
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_single_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    costs = parse_hlo_module(c.as_text())
+    assert costs.dot_flops == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.einsum("bd,de->be", c, wi,
+                              preferred_element_type=jnp.float32), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    c = _compile(f, x, w)
+    costs = parse_hlo_module(c.as_text())
+    assert costs.num_while_loops >= 1
+    assert costs.dot_flops == pytest.approx(12 * 2 * 16 * 64 * 64, rel=0.01)
+
+
+def test_nested_scan_trip_counts_multiply():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(ci, _):
+                return jnp.dot(ci, wi, preferred_element_type=jnp.float32), None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    c = _compile(f, x, w)
+    costs = parse_hlo_module(c.as_text())
+    assert costs.dot_flops == pytest.approx(5 * 3 * 2 * 8 * 32 * 32, rel=0.01)
+
+
+def test_in_place_cache_update_charges_slice_not_buffer():
+    def f(cache, upd):
+        return jax.lax.dynamic_update_slice(cache, upd, (0, 0))
+    cache = jax.ShapeDtypeStruct((4096, 256), jnp.float32)
+    upd = jax.ShapeDtypeStruct((1, 256), jnp.float32)
+    # donate the buffer so XLA aliases in place (otherwise it inserts a
+    # defensive full copy, which the traffic model correctly charges)
+    c = jax.jit(f, donate_argnums=(0,)).lower(cache, upd).compile()
+    costs = parse_hlo_module(c.as_text())
+    # full buffer is 4 MB; the update slice is 1 KB -> traffic must be << buffer
+    assert costs.hbm_bytes < 4096 * 256 * 4 / 4
+
+
+def test_roofline_report_terms():
+    rep = roofline_terms(
+        arch="x", shape="train_4k", mesh_desc="m", chips=256,
+        hlo_text="", model_flops=1e15,
+    )
+    assert rep.compute_s == 0.0 and rep.dominant == "compute"
+    rep2 = roofline_terms(
+        arch="x", shape="s", mesh_desc="m", chips=2,
+        hlo_text="""
+HloModule t, entry_computation_layout={()->f32[]}
+
+ENTRY %main () -> f32[] {
+  %p = f32[1024,1024]{1,0} parameter(0)
+  %q = f32[1024,1024]{1,0} parameter(1)
+  %dot = f32[1024,1024]{1,0} dot(%p, %q), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-reduce = f32[1024,1024]{1,0} all-reduce(%dot), replica_groups=[1,2]<=[2], to_apply=%add
+}
+""",
+        model_flops=2.0 * 1024**3,
+    )
+    assert rep2.flops_per_chip == 2 * 1024**3
+    # AR wire: 2 * 4MB * (2-1)/2 = 4 MB
+    assert rep2.wire_bytes_per_chip == pytest.approx(4 * 1024**2, rel=0.01)
+    assert 0 < rep2.roofline_fraction <= 1.0
+
+
+def test_collective_group_size_parsing():
+    hlo = """
+HloModule t
+
+ENTRY %main () -> f32[] {
+  %p = f32[256,256]{1,0} parameter(0)
+  %ag = f32[256,4096]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={1}
+}
+"""
+    costs = parse_hlo_module(hlo)
+    # AG wire: result 4 MB * 15/16
+    assert costs.collective_wire_bytes == pytest.approx(
+        256 * 4096 * 4 * 15 / 16, rel=0.01
+    )

@@ -1,0 +1,130 @@
+"""Correctness of the self-join against the brute-force oracle (Sec. 3.1)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import SelfJoinConfig, self_join
+from repro.core.brute import brute_counts, brute_pairs
+from repro.core.ego import ego_join_counts
+from repro.core.tuning import estimate_k_costs, select_k
+from repro.data import clustered_dataset, exponential_dataset, uniform_dataset
+
+DATASETS = [
+    ("exp16", exponential_dataset(600, 16, seed=1), 0.05),
+    ("exp64", exponential_dataset(400, 64, seed=2), 0.16),
+    ("clustered32", clustered_dataset(500, 32, cluster_std=0.05, seed=3), 0.25),
+    ("uniform8", uniform_dataset(500, 8, seed=4), 0.3),
+    ("lowvar", clustered_dataset(400, 24, low_variance_dims=12, seed=5), 0.3),
+]
+
+
+@pytest.mark.parametrize("name,d,eps", DATASETS, ids=[x[0] for x in DATASETS])
+@pytest.mark.parametrize("sortidu", [False, True])
+@pytest.mark.parametrize("shortc", [False, True])
+def test_counts_match_brute(name, d, eps, sortidu, shortc):
+    truth = brute_counts(d, eps)
+    cfg = SelfJoinConfig(
+        eps=eps, k=4, sortidu=sortidu, shortc=shortc, tile_size=16, dim_block=8
+    )
+    res = self_join(d, cfg)
+    np.testing.assert_array_equal(res.counts, truth)
+    assert res.stats.num_results == int(truth.sum())
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 6, 10])
+def test_counts_match_brute_all_k(k):
+    d = exponential_dataset(500, 16, seed=7)
+    eps = 0.06
+    truth = brute_counts(d, eps)
+    res = self_join(d, SelfJoinConfig(eps=eps, k=k, tile_size=16))
+    np.testing.assert_array_equal(res.counts, truth)
+
+
+@pytest.mark.parametrize("reorder", [False, True])
+def test_reorder_changes_plan_not_result(reorder):
+    d = clustered_dataset(400, 24, low_variance_dims=12, seed=8)
+    eps = 0.3
+    truth = brute_counts(d, eps)
+    res = self_join(d, SelfJoinConfig(eps=eps, k=3, reorder=reorder, tile_size=16))
+    np.testing.assert_array_equal(res.counts, truth)
+
+
+def test_reorder_improves_filtering_on_low_variance_prefix():
+    """Paper Fig. 6b: low-variance leading dims -> REORDER prunes candidates."""
+    d = clustered_dataset(800, 24, low_variance_dims=12, seed=9)
+    eps = 0.25
+    on = self_join(d, SelfJoinConfig(eps=eps, k=4, reorder=True, tile_size=16))
+    off = self_join(d, SelfJoinConfig(eps=eps, k=4, reorder=False, tile_size=16))
+    assert on.stats.num_candidates < off.stats.num_candidates
+
+
+def test_sortidu_prunes():
+    d = exponential_dataset(800, 32, seed=10)
+    eps = 0.08
+    on = self_join(d, SelfJoinConfig(eps=eps, k=4, sortidu=True, tile_size=8))
+    off = self_join(d, SelfJoinConfig(eps=eps, k=4, sortidu=False, tile_size=8))
+    assert on.stats.num_tile_pairs_evaluated < off.stats.num_tile_pairs_evaluated
+    np.testing.assert_array_equal(on.counts, off.counts)
+
+
+def test_shortc_skips_blocks():
+    d = exponential_dataset(500, 64, seed=11)
+    res = self_join(
+        d, SelfJoinConfig(eps=0.1, k=6, shortc=True, tile_size=16, dim_block=8)
+    )
+    assert res.stats.dim_blocks_skipped > 0
+
+
+def test_pairs_mode_matches_brute():
+    d = exponential_dataset(250, 16, seed=12)
+    eps = 0.08
+    res = self_join(d, SelfJoinConfig(eps=eps, k=4, tile_size=16), return_pairs=True)
+    got = set(map(tuple, res.pairs.tolist()))
+    want = set(map(tuple, brute_pairs(d, eps).tolist()))
+    assert got == want
+    assert len(res.pairs) == res.stats.num_results
+
+
+def test_pallas_backend_matches_jnp():
+    d = exponential_dataset(300, 32, seed=13)
+    eps = 0.1
+    base = SelfJoinConfig(eps=eps, k=4, tile_size=16, dim_block=8)
+    r1 = self_join(d, base)
+    r2 = self_join(d, dataclasses.replace(base, use_pallas=True))
+    np.testing.assert_array_equal(r1.counts, r2.counts)
+    assert r1.stats.dim_blocks_skipped == r2.stats.dim_blocks_skipped
+
+
+def test_ego_baseline_matches_brute():
+    d = exponential_dataset(400, 16, seed=14)
+    eps = 0.06
+    np.testing.assert_array_equal(ego_join_counts(d, eps), brute_counts(d, eps))
+
+
+def test_selectivity_definition():
+    d = exponential_dataset(300, 16, seed=15)
+    res = self_join(d, SelfJoinConfig(eps=0.05, k=4, tile_size=16))
+    # paper Eq. 1: S_D = (|R| - |D|) / |D|
+    assert res.stats.selectivity == pytest.approx(
+        (res.stats.num_results - 300) / 300
+    )
+
+
+def test_select_k_prefers_moderate_k():
+    d = exponential_dataset(2000, 16, seed=16)
+    ests = estimate_k_costs(d, 0.05, ks=[1, 2, 4, 6, 8, 12])
+    k = select_k(d, 0.05, ks=[1, 2, 4, 6, 8, 12])
+    # paper Sec. 5.6: k > 10 degrades search cost exponentially
+    assert k <= 10
+    by_k = {e.k: e for e in ests}
+    assert by_k[12].search_ops > by_k[6].search_ops
+
+
+def test_empty_and_tiny_inputs():
+    empty = np.zeros((0, 8), np.float32)
+    res = self_join(empty, SelfJoinConfig(eps=0.1, k=2))
+    assert res.counts.shape == (0,)
+    one = np.random.default_rng(0).random((1, 8)).astype(np.float32)
+    res = self_join(one, SelfJoinConfig(eps=0.1, k=2))
+    assert res.counts.tolist() == [1]
