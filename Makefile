@@ -1,0 +1,21 @@
+# Convenience targets; `make ci` mirrors .github/workflows/ci.yml, except
+# the workflow additionally deselects two pre-existing seed failures
+# (see ROADMAP.md open items) -- `make test` runs the full tier-1 command.
+
+PYTHON ?= python
+
+.PHONY: install ci test bench-engine quickstart
+
+install:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+ci: install test
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+bench-engine:
+	PYTHONPATH=src:. $(PYTHON) benchmarks/bench_engine.py
+
+quickstart:
+	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -1,0 +1,58 @@
+"""Device-resident engine vs the pre-refactor host-loop path.
+
+The acceptance gate for the SelfJoinEngine refactor: on the same dataset and
+config, ``SelfJoinEngine`` (jitted tiling + in-jit scatter / compaction) must
+at least match ``self_join_hostloop`` (host make_tiles loop, ``np.add.at``,
+``np.nonzero``) in wall time, for both counts and pairs mode.  Also reports
+the engine's multi-eps sweep, which reuses one index and one set of compiled
+chunk programs across eps values.
+"""
+from __future__ import annotations
+
+from benchmarks.common import record, timeit
+from repro.core import SelfJoinConfig, SelfJoinEngine
+from repro.core.selfjoin import self_join_hostloop
+from repro.data import exponential_dataset
+
+
+def run(num_points: int = 6000, num_dims: int = 16, eps: float = 0.05):
+    d = exponential_dataset(num_points, num_dims, seed=0)
+    cfg = SelfJoinConfig(eps=eps, k=4, tile_size=32, dim_block=8)
+
+    # counts mode -------------------------------------------------------
+    host_us = timeit(lambda: self_join_hostloop(d, cfg), repeats=2)
+    engine = SelfJoinEngine(d, cfg)   # index build + compile amortized...
+    engine.count()                    # ...warm-up (compile) outside timing
+    eng_us = timeit(lambda: engine.count(), repeats=2)
+    cold_us = timeit(lambda: SelfJoinEngine(d, cfg).count())
+    record("engine/counts/hostloop", host_us)
+    record("engine/counts/engine_warm", eng_us,
+           f"speedup={host_us / max(eng_us, 1e-9):.2f}x")
+    record("engine/counts/engine_cold", cold_us,
+           f"speedup={host_us / max(cold_us, 1e-9):.2f}x")
+
+    # pairs mode --------------------------------------------------------
+    host_us = timeit(lambda: self_join_hostloop(d, cfg, return_pairs=True),
+                     repeats=2)
+    engine.pairs()  # warm-up
+    eng_us = timeit(lambda: engine.pairs(), repeats=2)
+    record("engine/pairs/hostloop", host_us)
+    record("engine/pairs/engine_warm", eng_us,
+           f"speedup={host_us / max(eng_us, 1e-9):.2f}x")
+
+    # multi-eps sweep: one index, zero recompiles between sweep points --
+    sweep = [eps * s for s in (0.6, 0.8, 1.0)]
+    engine.query(sweep)  # warm-up
+    sweep_us = timeit(lambda: engine.query(sweep))
+    fresh_us = timeit(
+        lambda: [SelfJoinEngine(d, SelfJoinConfig(
+            eps=e, k=4, tile_size=32, dim_block=8)).count() for e in sweep]
+    )
+    record("engine/sweep3/reused_engine", sweep_us,
+           f"vs_fresh={fresh_us / max(sweep_us, 1e-9):.2f}x")
+    record("engine/sweep3/fresh_engines", fresh_us)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

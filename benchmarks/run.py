@@ -11,6 +11,7 @@ import traceback
 
 MODULES = [
     "bench_memops",             # Fig. 7  (fast, analytic)
+    "bench_engine",             # engine vs host-loop wall time
     "bench_k_sweep",            # Fig. 6
     "bench_eps_sweep",          # Figs. 5/8/9
     "bench_overhead",           # Table 2

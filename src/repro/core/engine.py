@@ -1,0 +1,435 @@
+"""Device-resident self-join engine (DESIGN.md #1.5).
+
+``SelfJoinEngine`` keeps the entire hot loop of GPU-Join (Gowanlock &
+Karsin 2018, Alg. 1 lines 11-19 plus constructNeighborTable) on the
+accelerator.  Only index *construction* (REORDER, grid build, tile-pair
+planning) runs on the host, exactly as in the paper; everything downstream
+is jitted device code:
+
+  tiling       -- ``ops.make_tiles_device``: one vectorized gather replaces
+                  the per-tile host loop;
+  evaluation   -- the tile distance kernel (Pallas or jnp backend), SHORTC
+                  dimension-blocked, eps as a traced scalar;
+  count scatter-- per-point neighbour counts accumulate via an in-jit
+                  scatter-add over the grid-sorted layout (the host
+                  ``np.add.at`` is gone);
+  pairs        -- device-side stream compaction (prefix-sum over the hit
+                  mask) into a preallocated ``max_pairs`` buffer with an
+                  overflow flag (the host ``np.nonzero`` is gone), already
+                  mapped to original point ids via a device gather.
+
+Chunking / compilation-caching contract: the candidate tile-pair list is
+processed in fixed-size, zero-padded chunks; eps, the chunk's real length,
+and the running (buffer, offset, overflow, counts) state are all traced, so
+XLA compiles **at most one program per (mode, chunk shape)** and the Python
+chunk loop dispatches that same executable -- no host compute, no host
+transfers inside the loop.  The executables and the grid index are reused
+across ``count()`` / ``pairs()`` / ``query()`` calls; a multi-eps sweep
+recompiles nothing.
+
+``repro.core.selfjoin.self_join`` is a thin wrapper over this class.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batching as batching_mod
+from repro.core.grid import GridIndex, TilePlan, build_grid, build_tile_plan
+from repro.core.reorder import variance_reorder
+from repro.core.types import (
+    EngineConfig,
+    SelfJoinConfig,
+    SelfJoinResult,
+    SelfJoinStats,
+)
+from repro.kernels import ops
+
+_MAX_AUTO_GROW = 8  # doublings before giving up on an auto-sized buffer
+
+
+# ---------------------------------------------------------------------------
+# Device programs.  Module-level so every engine instance shares one jit
+# cache; all dynamic state is passed (and returned) as traced values.
+# ---------------------------------------------------------------------------
+
+
+def _chunk_validity(tile_len, tile_start, pa, real, t):
+    """(pair_valid (C,), row validity (C,T), scatter rows (C,T))."""
+    c = pa.shape[0]
+    lane = jnp.arange(t, dtype=jnp.int32)
+    pair_valid = jnp.arange(c, dtype=jnp.int32) < real
+    valid = pair_valid[:, None] & (lane[None, :] < tile_len[pa][:, None])
+    idx = tile_start[pa][:, None] + lane[None, :]
+    return pair_valid, valid, idx
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dim_block", "shortc", "backend", "interpret")
+)
+def _count_chunk_program(
+    counts_sorted,  # (N,) int32 running per-point counts, grid-sorted
+    skipped_tot,    # ()  int32 running SHORTC skipped-block total
+    tiles,          # (num_tiles, T, n_pad) f32
+    tile_len,       # (num_tiles,) int32
+    tile_start,     # (num_tiles,) int32
+    pa, pb,         # (C,) int32 padded chunk of the candidate pair list
+    real,           # () int32 valid prefix of the chunk
+    eps,            # () f32 traced search radius
+    *,
+    dim_block, shortc, backend, interpret,
+):
+    """One counts-mode chunk: evaluate + scatter-add, fully on device."""
+    counts, skipped = ops.eval_tile_pairs(
+        tiles, tile_len, pa, pb, eps,
+        dim_block=dim_block, shortc=shortc, backend=backend,
+        interpret=interpret,
+    )
+    t = tiles.shape[1]
+    n = counts_sorted.shape[0]
+    pair_valid, valid, idx = _chunk_validity(tile_len, tile_start, pa, real, t)
+    idx = jnp.where(valid, idx, n)  # out-of-range -> dropped
+    counts_sorted = counts_sorted.at[idx].add(
+        jnp.where(valid, counts, 0), mode="drop"
+    )
+    skipped_tot = skipped_tot + jnp.where(pair_valid, skipped, 0).sum()
+    return counts_sorted, skipped_tot
+
+
+@functools.partial(
+    jax.jit, static_argnames=("hit_cap", "dim_block", "backend", "interpret")
+)
+def _pairs_chunk_program(
+    buf,            # (cap + hit_cap, 2) int32 result buffer, original ids
+    offset,         # ()  int32 pairs found so far (may exceed cap)
+    max_chunk_hits, # ()  int32 largest per-chunk hit count seen
+    tiles, tile_len, tile_start,
+    point_order,    # (N,) int32 grid-sorted -> original id
+    pa, pb, real, eps,
+    *,
+    hit_cap, dim_block, backend, interpret,
+):
+    """One pairs-mode chunk: evaluate + compact into ``buf``, fully on device.
+
+    Compaction is rank-select, not scatter (scatter over the full C*T*T
+    mask serializes badly on CPU XLA): a row-wise prefix sum over the hit
+    mask (C independent chains, then a tiny base scan) gives every hit its
+    global output rank; ``searchsorted`` recovers the flat positions of
+    ranks 1..hit_cap, and the gathered (a, b) rows land in ``buf`` as one
+    contiguous ``dynamic_update_slice`` block at ``offset``.  Ranks past
+    the chunk's true hit count select clamped garbage that the next
+    chunk's block (or the final slice) overwrites.  Nothing is lost
+    silently: ``offset`` advances by the exact hit count, and the host
+    driver retries with a larger buffer when ``offset`` exceeds the
+    capacity, or with a larger ``hit_cap`` when ``max_chunk_hits`` says a
+    single chunk outgrew the rank window.  Per-point counts are *not*
+    accumulated here -- they fall out of the finished buffer in one
+    scatter (``_counts_from_pairs``).
+    """
+    _, _, mask = ops.eval_tile_pairs(
+        tiles, tile_len, pa, pb, eps,
+        dim_block=dim_block, shortc=True, backend=backend,
+        return_mask=True, interpret=interpret,
+    )
+    t = tiles.shape[1]
+    c = pa.shape[0]
+    cap = buf.shape[0] - hit_cap
+
+    pair_valid = jnp.arange(c, dtype=jnp.int32) < real
+    hits = (mask.astype(jnp.bool_) & pair_valid[:, None, None]).reshape(
+        c, t * t
+    ).astype(jnp.int32)
+    row_cum = jnp.cumsum(hits, axis=1)            # C independent prefix sums
+    row_tot = row_cum[:, -1]
+    base = jnp.cumsum(row_tot) - row_tot          # (C,) exclusive
+    cum = (row_cum + base[:, None]).reshape(-1)   # global inclusive ranks
+    nh = row_tot.sum(dtype=jnp.int32)
+    ranks = jnp.arange(1, hit_cap + 1, dtype=jnp.int32)
+    hit_idx = jnp.minimum(jnp.searchsorted(cum, ranks), c * t * t - 1)
+    p_ = hit_idx // (t * t)
+    i_ = (hit_idx // t) % t
+    j_ = hit_idx % t
+    a_orig = point_order[tile_start[pa[p_]] + i_]
+    b_orig = point_order[tile_start[pb[p_]] + j_]
+    block = jnp.stack([a_orig, b_orig], axis=1)           # (hit_cap, 2)
+    woff = jnp.minimum(offset, cap)  # post-overflow blocks land in padding
+    buf = jax.lax.dynamic_update_slice(buf, block, (woff, jnp.int32(0)))
+
+    offset = offset + nh
+    max_chunk_hits = jnp.maximum(max_chunk_hits, nh)
+    return buf, offset, max_chunk_hits
+
+
+@jax.jit
+def _counts_from_pairs(counts0, buf, num):
+    """Per-point counts from the compacted pair buffer (original order)."""
+    rows = jnp.arange(buf.shape[0], dtype=jnp.int32)
+    a = jnp.where(rows < num, buf[:, 0], counts0.shape[0])
+    return counts0.at[a].add(1, mode="drop")
+
+
+@jax.jit
+def _unsort_counts(counts_sorted, point_order):
+    """Grid-sorted counts -> original point order (device scatter)."""
+    return jnp.zeros_like(counts_sorted).at[point_order].set(counts_sorted)
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+
+class SelfJoinEngine:
+    """Reusable device-resident self-join over one dataset.
+
+    Builds the grid index once (at construction, for ``config.eps``) and
+    keeps the tiled point layout resident on device.  ``count()`` /
+    ``pairs()`` / ``query()`` reuse both the index and the compiled chunk
+    programs; querying a *larger* eps than the index was built for
+    transparently rebuilds the index (a smaller eps reuses it -- the
+    candidate set is a superset, and the distance filter runs at the
+    queried eps).
+
+    ``eps == 0`` is supported (degenerate join: duplicates + self); the
+    grid is then binned at unit width, which is correct for any radius
+    not exceeding it.  Note the fp32 matmul-form numerics (DESIGN.md #6):
+    at eps near 0, exact-duplicate/self matches are only guaranteed on
+    quantized coordinates (e.g. a 1/64 grid); on arbitrary fp32 data the
+    rounding of ``|a|^2 + |b|^2 - 2ab`` can exceed an eps^2 of ~1e-8.
+    """
+
+    def __init__(
+        self,
+        d: np.ndarray,
+        config: SelfJoinConfig,
+        engine_config: Optional[EngineConfig] = None,
+    ):
+        self.config = config
+        self.engine = engine_config or EngineConfig()
+        pts = np.ascontiguousarray(np.asarray(d, dtype=np.float32))
+        self.num_points, self.num_dims = pts.shape
+        self._pts = pts
+        self._work = pts
+        self._perm = None
+        if config.reorder and self.num_points:
+            self._work, self._perm = variance_reorder(pts, config.sample_frac)
+        self._index_eps: Optional[float] = None
+        self.grid: Optional[GridIndex] = None
+        self.plan: Optional[TilePlan] = None
+        if self.num_points:
+            self._build_index(config.eps)
+
+    # -- index ------------------------------------------------------------
+
+    def _build_index(self, eps: float) -> None:
+        cfg = self.config
+        self.grid = build_grid(self._work, eps, cfg.k)  # eps=0-safe (unit bins)
+        self.plan = build_tile_plan(self.grid, cfg.tile_size, cfg.sortidu)
+        self._index_eps = float(eps)
+        # device-resident state
+        self._tile_start = jnp.asarray(self.plan.tile_start, jnp.int32)
+        self._tile_len = jnp.asarray(self.plan.tile_len, jnp.int32)
+        self._point_order = jnp.asarray(self.grid.point_order, jnp.int32)
+        self._tiles = ops.make_tiles_device(
+            jnp.asarray(self.grid.pts_sorted),
+            self._tile_start,
+            self._tile_len,
+            tile_size=cfg.tile_size,
+            dim_block=cfg.dim_block,
+        )
+        self._chunk_cache: dict = {}
+
+    def _ensure_index(self, eps: float) -> None:
+        if self._index_eps is None or eps > self._index_eps:
+            self._build_index(eps)
+
+    def _chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
+        """Padded device chunks of the candidate pair list, cached."""
+        got = self._chunk_cache.get(chunk)
+        if got is None:
+            got = [
+                (pa, pb, real)
+                for _, pa, pb, real in ops._chunks(
+                    self.plan.pair_a, self.plan.pair_b, chunk
+                )
+            ]
+            self._chunk_cache[chunk] = got
+        return got
+
+    def _base_stats(self, eps: float) -> SelfJoinStats:
+        stats = SelfJoinStats(
+            num_points=self.num_points,
+            num_dims=self.num_dims,
+            k=min(self.config.k, self.num_dims),
+        )
+        if self.plan is not None:
+            stats.num_nonempty_cells = self.grid.num_cells
+            stats.num_tiles = self.plan.num_tiles
+            stats.num_tile_pairs_total = self.plan.num_tile_pairs_total
+            stats.num_tile_pairs_evaluated = self.plan.num_pairs
+            stats.num_candidates = self.plan.num_candidates
+        return stats
+
+    @property
+    def _num_dim_blocks(self) -> int:
+        return self._tiles.shape[2] // self.config.dim_block
+
+    # -- queries ----------------------------------------------------------
+
+    def count(self, eps: Optional[float] = None) -> SelfJoinResult:
+        """Per-point neighbour counts (original order); no pair buffer."""
+        eps = self.config.eps if eps is None else float(eps)
+        if self.num_points == 0:
+            return SelfJoinResult(
+                counts=np.zeros(0, np.int64), stats=self._base_stats(eps)
+            )
+        self._ensure_index(eps)
+        cfg, eng = self.config, self.engine
+        stats = self._base_stats(eps)
+
+        counts_sorted = jnp.zeros(self.num_points, jnp.int32)
+        skipped_tot = jnp.zeros((), jnp.int32)
+        for pa, pb, real in self._chunks(eng.count_chunk):
+            counts_sorted, skipped_tot = _count_chunk_program(
+                counts_sorted, skipped_tot,
+                self._tiles, self._tile_len, self._tile_start,
+                pa, pb, real, eps,
+                dim_block=cfg.dim_block, shortc=cfg.shortc,
+                backend="pallas" if cfg.use_pallas else "jnp",
+                interpret=eng.interpret,
+            )
+            stats.num_chunks += 1
+        counts = np.asarray(
+            _unsort_counts(counts_sorted, self._point_order)
+        ).astype(np.int64)
+        stats.num_results = int(counts.sum())
+        stats.dim_blocks_skipped = int(skipped_tot)
+        stats.dim_blocks_total = self.plan.num_pairs * self._num_dim_blocks
+        return SelfJoinResult(counts=counts, stats=stats)
+
+    def pairs(
+        self,
+        eps: Optional[float] = None,
+        max_pairs: Optional[int] = None,
+        _cap_hint: Optional[int] = None,
+    ) -> SelfJoinResult:
+        """Counts plus the materialized (a, b) pair list, original ids.
+
+        With an explicit ``max_pairs`` (here or in ``EngineConfig``),
+        overflow raises ``RuntimeError``.  Otherwise the buffer is sized
+        from the paper's result-size estimate (Sec. 3.2.2); on overflow
+        the exact |R| is known after the pass, so the buffer regrows to
+        it in a single retry.  ``_cap_hint`` lets ``query()`` supply one
+        shared auto-mode capacity for a whole eps sweep.
+        """
+        eps = self.config.eps if eps is None else float(eps)
+        if self.num_points == 0:
+            return SelfJoinResult(
+                counts=np.zeros(0, np.int64),
+                stats=self._base_stats(eps),
+                pairs=np.zeros((0, 2), np.int32),
+            )
+        self._ensure_index(eps)
+        cfg, eng = self.config, self.engine
+        backend = "pallas" if cfg.use_pallas else "jnp"
+
+        explicit = max_pairs if max_pairs is not None else eng.max_pairs
+        auto = explicit is None
+        if not auto:
+            cap = int(explicit)
+        elif _cap_hint is not None:
+            cap = int(_cap_hint)
+        else:
+            cap = self._auto_capacity(eps, backend)
+        t = cfg.tile_size
+        flat_per_chunk = eng.pairs_chunk * t * t
+        hit_cap = min(flat_per_chunk, 4096)
+
+        retries = 0
+        while True:
+            stats = self._base_stats(eps)
+            buf = jnp.zeros((cap + hit_cap, 2), jnp.int32)
+            offset = jnp.zeros((), jnp.int32)
+            max_hits = jnp.zeros((), jnp.int32)
+            for pa, pb, real in self._chunks(eng.pairs_chunk):
+                buf, offset, max_hits = _pairs_chunk_program(
+                    buf, offset, max_hits,
+                    self._tiles, self._tile_len, self._tile_start,
+                    self._point_order, pa, pb, real, eps,
+                    hit_cap=hit_cap, dim_block=cfg.dim_block,
+                    backend=backend, interpret=eng.interpret,
+                )
+                stats.num_chunks += 1
+            num = int(offset)
+            # exact totals are known after a full pass, so each overflow kind
+            # resolves in one retry: widen the per-chunk rank window first,
+            # then (auto mode) regrow the buffer to the true |R|.
+            if int(max_hits) > hit_cap and retries < _MAX_AUTO_GROW:
+                hit_cap = min(flat_per_chunk, -(-int(max_hits) // 1024) * 1024)
+                retries += 1
+                continue
+            if num > cap:
+                if auto and eng.auto_grow and retries < _MAX_AUTO_GROW:
+                    cap = batching_mod.suggest_pairs_capacity(num, 1.0)
+                    retries += 1
+                    continue
+                raise RuntimeError(
+                    f"result exceeded max_pairs={cap}; raise the cap or "
+                    f"lower eps"
+                )
+            break
+
+        pairs = np.asarray(buf[:num])
+        counts = np.asarray(
+            _counts_from_pairs(
+                jnp.zeros(self.num_points, jnp.int32), buf, offset
+            )
+        ).astype(np.int64)
+        stats.num_results = int(counts.sum())
+        stats.dim_blocks_total = self.plan.num_pairs * self._num_dim_blocks
+        stats.pairs_capacity = cap
+        stats.overflow_retries = retries
+        return SelfJoinResult(counts=counts, stats=stats, pairs=pairs)
+
+    def _auto_capacity(self, eps: float, backend: str) -> int:
+        """Auto-mode pairs-buffer capacity from the paper's |R| estimate."""
+        cfg, eng = self.config, self.engine
+        est = batching_mod.estimate_result_size(
+            self._tiles, self._tile_len, self.plan, eps=eps,
+            dim_block=cfg.dim_block, backend=backend,
+            sample_frac=cfg.sample_frac, interpret=eng.interpret,
+        )
+        return batching_mod.suggest_pairs_capacity(est, eng.pairs_headroom)
+
+    def query(
+        self,
+        eps_values: Sequence[float],
+        return_pairs: bool = False,
+        max_pairs: Optional[int] = None,
+    ) -> List[SelfJoinResult]:
+        """Multi-eps sweep over one index and one set of executables.
+
+        The index is built once at ``max(eps_values)``; every eps then runs
+        through the already-compiled chunk programs (eps is traced, so no
+        recompilation happens between sweep points).  In auto-sized pairs
+        mode the result-size estimate also runs once, at the largest eps --
+        its capacity bounds every smaller sweep point.
+        """
+        eps_list = [float(e) for e in eps_values]
+        if eps_list and self.num_points:
+            self._ensure_index(max(eps_list))
+        if return_pairs:
+            cap_hint = None
+            explicit = max_pairs if max_pairs is not None else self.engine.max_pairs
+            if explicit is None and eps_list and self.num_points:
+                backend = "pallas" if self.config.use_pallas else "jnp"
+                cap_hint = self._auto_capacity(max(eps_list), backend)
+            return [
+                self.pairs(e, max_pairs=max_pairs, _cap_hint=cap_hint)
+                for e in eps_list
+            ]
+        return [self.count(e) for e in eps_list]

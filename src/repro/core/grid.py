@@ -79,7 +79,10 @@ def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
     k = int(min(k, n))
     u_dim = k if k < n else n - 1
 
-    coords = np.floor(pts[:, :k].astype(np.float64) / eps).astype(np.int64)
+    # eps == 0 (duplicate join): bin at unit width -- any positive cell
+    # width is correct for a radius not exceeding it.
+    bin_width = eps if eps > 0 else 1.0
+    coords = np.floor(pts[:, :k].astype(np.float64) / bin_width).astype(np.int64)
     if n_pts:
         cmin = coords.min(axis=0)
         coords -= cmin  # origin at 0 per dim

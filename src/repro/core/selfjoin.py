@@ -1,15 +1,23 @@
 """GPU-Join (paper Alg. 1), TPU-native: the top-level self-join driver.
 
-Pipeline (paper lines 1-10, adapted per DESIGN.md):
+Pipeline (paper lines 1-10, adapted per DESIGN.md #1):
 
   1. REORDER the dimensions by sampled variance          (Sec. 4.2)
   2. build the grid index over the first k dims          (Secs. 3.2.1, 4.1)
   3. build the candidate tile-pair plan, SORTIDU-pruned  (Sec. 4.3)
-  4. estimate the result size, split into >= 3 batches   (Sec. 3.2.2)
-  5. evaluate batches with the tile distance kernel
+  4. estimate the result size, preallocate the pairs
+     buffer / derive batches                             (Sec. 3.2.2)
+  5. evaluate chunks with the tile distance kernel
      (SHORTC dimension-blocked pruning)                  (Sec. 4.4)
-  6. scatter per-tile counts / extract pairs back to the
-     original point order (constructNeighborTable)
+  6. scatter per-point counts / compact pairs back to
+     the original point order (constructNeighborTable)
+
+``self_join`` is a thin wrapper over the device-resident
+``repro.core.engine.SelfJoinEngine``, which keeps steps 4-6 on the
+accelerator (DESIGN.md #1.5).  The original host-loop implementation is
+preserved as ``self_join_hostloop`` -- it is the baseline that
+``benchmarks/bench_engine.py`` measures the engine against, and a second
+oracle for parity tests.
 """
 from __future__ import annotations
 
@@ -18,7 +26,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import batching as batching_mod
-from repro.core.grid import GridIndex, TilePlan, build_grid, build_tile_plan
+from repro.core.engine import SelfJoinEngine
+from repro.core.grid import build_grid, build_tile_plan
 from repro.core.reorder import variance_reorder
 from repro.core.types import SelfJoinConfig, SelfJoinResult, SelfJoinStats
 from repro.kernels import ops
@@ -31,6 +40,24 @@ def self_join(
     max_pairs: Optional[int] = None,
 ) -> SelfJoinResult:
     """Find all ordered pairs within config.eps; counts per original point."""
+    engine = SelfJoinEngine(d, config)
+    if return_pairs:
+        return engine.pairs(max_pairs=max_pairs)
+    return engine.count()
+
+
+def self_join_hostloop(
+    d: np.ndarray,
+    config: SelfJoinConfig,
+    return_pairs: bool = False,
+    max_pairs: Optional[int] = None,
+) -> SelfJoinResult:
+    """Pre-engine reference path: host-side tiling loop, ``np.add.at``
+    count scatter and ``np.nonzero`` pair extraction between device calls.
+
+    Kept for benchmarking (the engine must at least match it) and as an
+    independent oracle.
+    """
     pts = np.ascontiguousarray(np.asarray(d, dtype=np.float32))
     n_pts, n = pts.shape
     stats = SelfJoinStats(num_points=n_pts, num_dims=n, k=min(config.k, n))

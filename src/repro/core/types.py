@@ -36,8 +36,33 @@ class SelfJoinConfig:
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
-        if self.eps <= 0:
-            raise ValueError(f"eps must be > 0, got {self.eps}")
+        if self.eps < 0:
+            raise ValueError(f"eps must be >= 0, got {self.eps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of the device-resident ``SelfJoinEngine`` (DESIGN.md #1.5).
+
+    The engine evaluates the candidate tile-pair list in fixed-size chunks;
+    each (mode, chunk shape) compiles to exactly one XLA program that is
+    reused across chunks, across calls, and across eps values (eps is a
+    traced scalar, never a compile-time constant).
+    """
+
+    count_chunk: int = 4096      # tile pairs per counts-mode device program
+    pairs_chunk: int = 1024      # tile pairs per pairs-mode device program
+    max_pairs: Optional[int] = None  # pairs-buffer capacity; None -> auto-size
+    auto_grow: bool = True       # on auto-sized overflow, regrow to the
+                                 # measured |R| (known after the pass) and retry
+    pairs_headroom: float = 2.0  # auto capacity = headroom * estimated |R|
+    interpret: bool = True       # run the Pallas kernel in interpret mode (CPU)
+
+    def __post_init__(self):
+        if self.count_chunk < 1 or self.pairs_chunk < 1:
+            raise ValueError("chunk sizes must be >= 1")
+        if self.max_pairs is not None and self.max_pairs < 0:
+            raise ValueError(f"max_pairs must be >= 0, got {self.max_pairs}")
 
 
 @dataclasses.dataclass
@@ -55,6 +80,9 @@ class SelfJoinStats:
     num_results: int = 0                 # |R| including self-pairs
     dim_blocks_skipped: int = 0          # SHORTC effect (tile-level)
     dim_blocks_total: int = 0
+    num_chunks: int = 0                  # device programs dispatched (engine)
+    pairs_capacity: int = 0              # preallocated pairs buffer rows (engine)
+    overflow_retries: int = 0            # auto-grow retries in pairs mode (engine)
 
     @property
     def selectivity(self) -> float:

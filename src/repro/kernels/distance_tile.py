@@ -13,7 +13,10 @@ Alg. 1 lines 11-19) re-thought for the TPU (DESIGN.md #1):
     pairs are decided and the remaining MXU work is skipped via ``pl.when``;
   * tiles are fetched from HBM into VMEM by BlockSpec index maps driven by
     scalar-prefetched tile indices (the flat candidate work list produced by
-    ``repro.core.grid.build_tile_plan``).
+    ``repro.core.grid.build_tile_plan``);
+  * ``eps`` is a *runtime* scalar, prefetched into SMEM alongside the tile
+    indices (DESIGN.md #1.5): one compiled program serves every eps value,
+    which is what lets ``SelfJoinEngine.query`` sweep eps without recompiling.
 
 Grid: ``(P, NB)`` -- P candidate pairs x NB dimension blocks; the dim-block
 axis is minor, so VMEM scratch carries the partial d2 across blocks of the
@@ -35,6 +38,7 @@ def _kernel(
     a_idx_ref,      # (P,) int32  scalar prefetch: A tile index per pair
     b_idx_ref,      # (P,) int32  scalar prefetch: B tile index per pair
     tile_len_ref,   # (num_tiles,) int32 scalar prefetch: valid points per tile
+    eps2_ref,       # (1,) f32    scalar prefetch: runtime eps^2
     a_ref,          # (1, T, DB) f32 VMEM: current dim block of the A tile
     b_ref,          # (1, T, DB) f32 VMEM: current dim block of the B tile
     counts_ref,     # (1, T) int32 out: per-A-point neighbour count
@@ -42,7 +46,6 @@ def _kernel(
     d2_ref,         # (T, T) f32 VMEM scratch: partial squared distances
     flags_ref,      # (2,) int32 SMEM scratch: [done, blocks_computed]
     *,
-    eps2: float,
     num_blocks: int,
     tile_size: int,
     out_mask_ref=None,  # optional (1, T, T) int8 out (pairs mode)
@@ -50,6 +53,7 @@ def _kernel(
     p = pl.program_id(0)
     j = pl.program_id(1)
     t = tile_size
+    eps2 = eps2_ref[0]
 
     @pl.when(j == 0)
     def _init():
@@ -91,18 +95,18 @@ def _kernel(
             out_mask_ref[0, :, :] = within.astype(jnp.int8)
 
 
-def _mask_kernel(*refs, eps2, num_blocks, tile_size):
-    (a_idx, b_idx, tl, a, b, counts, skipped, mask, d2, flags) = refs
+def _mask_kernel(*refs, num_blocks, tile_size):
+    (a_idx, b_idx, tl, eps2, a, b, counts, skipped, mask, d2, flags) = refs
     _kernel(
-        a_idx, b_idx, tl, a, b, counts, skipped, d2, flags,
-        eps2=eps2, num_blocks=num_blocks, tile_size=tile_size,
+        a_idx, b_idx, tl, eps2, a, b, counts, skipped, d2, flags,
+        num_blocks=num_blocks, tile_size=tile_size,
         out_mask_ref=mask,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("eps", "dim_block", "interpret", "return_mask"),
+    static_argnames=("dim_block", "interpret", "return_mask"),
 )
 def tile_pair_distance(
     tiles_pts: jax.Array,   # (num_tiles, T, n_pad) f32; n_pad % dim_block == 0
@@ -117,21 +121,23 @@ def tile_pair_distance(
 ):
     """Evaluate all candidate tile pairs.
 
-    Returns ``(counts (P,T) int32, skipped (P,1) int32)`` and, when
-    ``return_mask``, also the per-pair boolean mask ``(P, T, T) int8``.
+    ``eps`` may be a python float or a traced f32 scalar; it is forwarded to
+    the kernel as a scalar-prefetch operand, so distinct eps values share one
+    executable.  Returns ``(counts (P,T) int32, skipped (P,1) int32)`` and,
+    when ``return_mask``, also the per-pair boolean mask ``(P, T, T) int8``.
     """
     num_tiles, t, n_pad = tiles_pts.shape
     if n_pad % dim_block:
         raise ValueError(f"n_pad={n_pad} not a multiple of dim_block={dim_block}")
     nb = n_pad // dim_block
     p = pair_a.shape[0]
-    eps2 = float(eps) ** 2
+    eps2 = (jnp.asarray(eps, jnp.float32) ** 2).reshape(1)
 
     tile_spec_a = pl.BlockSpec(
-        (1, t, dim_block), lambda pp, jj, a_idx, b_idx, tl: (a_idx[pp], 0, jj)
+        (1, t, dim_block), lambda pp, jj, a_idx, b_idx, tl, e2: (a_idx[pp], 0, jj)
     )
     tile_spec_b = pl.BlockSpec(
-        (1, t, dim_block), lambda pp, jj, a_idx, b_idx, tl: (b_idx[pp], 0, jj)
+        (1, t, dim_block), lambda pp, jj, a_idx, b_idx, tl, e2: (b_idx[pp], 0, jj)
     )
     counts_spec = pl.BlockSpec((1, t), lambda pp, jj, *_: (pp, 0))
     skip_spec = pl.BlockSpec((1, 1), lambda pp, jj, *_: (pp, 0))
@@ -144,16 +150,12 @@ def tile_pair_distance(
     if return_mask:
         out_shapes.append(jax.ShapeDtypeStruct((p, t, t), jnp.int8))
         out_specs.append(pl.BlockSpec((1, t, t), lambda pp, jj, *_: (pp, 0, 0)))
-        body = functools.partial(
-            _mask_kernel, eps2=eps2, num_blocks=nb, tile_size=t
-        )
+        body = functools.partial(_mask_kernel, num_blocks=nb, tile_size=t)
     else:
-        body = functools.partial(
-            _kernel, eps2=eps2, num_blocks=nb, tile_size=t
-        )
+        body = functools.partial(_kernel, num_blocks=nb, tile_size=t)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(p, nb),
         in_specs=[tile_spec_a, tile_spec_b],
         out_specs=out_specs,
@@ -167,4 +169,4 @@ def tile_pair_distance(
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-    )(pair_a, pair_b, tile_len, tiles_pts, tiles_pts)
+    )(pair_a, pair_b, tile_len, eps2, tiles_pts, tiles_pts)

@@ -8,10 +8,19 @@ Two interchangeable backends with one contract:
     blocked algorithm (used for CPU-speed benchmarking and as the XLA
     fallback).
 
-Both take the tiled point layout produced by ``make_tiles`` and the flat
-candidate pair list from ``repro.core.grid.build_tile_plan``, and are
-evaluated in fixed-size chunks so XLA compiles exactly one program per
-dataset layout.
+Compilation-caching contract (DESIGN.md #1.5): the candidate pair list is
+evaluated in fixed-size, zero-padded chunks, and ``eps`` is always a traced
+scalar, so XLA compiles exactly one program per (backend, chunk shape,
+dim_block) -- never one per dataset, per chunk, or per eps value.  The
+building blocks here are traceable (``eval_tile_pairs``,
+``make_tiles_device``) so ``repro.core.engine`` can fuse them with its
+scatter/compaction epilogues into single device programs; the jitted
+``tile_counts`` / ``tile_mask`` entry points below remain the standalone
+host-facing API.
+
+``make_tiles`` re-lays the grid-sorted points into the (num_tiles, T, n_pad)
+layout the kernel consumes; it is a vectorized gather (host numpy) with a
+device twin ``make_tiles_device`` that runs inside jit.
 """
 from __future__ import annotations
 
@@ -36,23 +45,94 @@ def make_tiles(
 
     Zero padding in both the point axis (tail tiles) and the dimension axis
     (n -> n_pad) is distance-neutral; validity is enforced via ``tile_len``.
+    Vectorized gather -- no per-tile host loop.
+    """
+    num_tiles = tile_start.shape[0]
+    n_pts, n = pts_sorted.shape
+    n_pad = ((n + dim_block - 1) // dim_block) * dim_block
+    if num_tiles == 0:
+        return (
+            np.zeros((1, tile_size, n_pad), dtype=np.float32),
+            tile_len.astype(np.int32),
+        )
+    lane = np.arange(tile_size, dtype=np.int64)
+    idx = tile_start.astype(np.int64)[:, None] + lane[None, :]   # (num_tiles, T)
+    valid = lane[None, :] < tile_len.astype(np.int64)[:, None]
+    gathered = pts_sorted[np.minimum(idx, max(n_pts - 1, 0))]    # (num_tiles, T, n)
+    tiles = np.zeros((num_tiles, tile_size, n_pad), dtype=np.float32)
+    tiles[:, :, :n] = np.where(valid[:, :, None], gathered, 0.0)
+    return tiles, tile_len.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size", "dim_block"))
+def make_tiles_device(
+    pts_sorted: jax.Array,    # (N, n) f32
+    tile_start: jax.Array,    # (num_tiles,) int32
+    tile_len: jax.Array,      # (num_tiles,) int32
+    *,
+    tile_size: int,
+    dim_block: int,
+) -> jax.Array:
+    """Device twin of ``make_tiles``: one gather + pad, inside jit.
+
+    Returns (max(num_tiles,1), T, n_pad) f32, resident on device.  Out-of-
+    range gathers (tail-tile padding lanes) are clamped and then zeroed by
+    the validity mask, so the result is bit-identical to the host layout.
     """
     num_tiles = tile_start.shape[0]
     n = pts_sorted.shape[1]
     n_pad = ((n + dim_block - 1) // dim_block) * dim_block
-    tiles = np.zeros((max(num_tiles, 1), tile_size, n_pad), dtype=np.float32)
-    for i in range(num_tiles):
-        s, l = int(tile_start[i]), int(tile_len[i])
-        tiles[i, :l, :n] = pts_sorted[s : s + l]
-    return tiles, tile_len.astype(np.int32)
+    if num_tiles == 0:
+        return jnp.zeros((1, tile_size, n_pad), jnp.float32)
+    lane = jnp.arange(tile_size, dtype=jnp.int32)
+    idx = tile_start[:, None] + lane[None, :]                    # (num_tiles, T)
+    valid = lane[None, :] < tile_len[:, None]
+    gathered = pts_sorted[idx]            # OOB rows clamp (jit gather) then mask
+    tiles = jnp.where(valid[:, :, None], gathered, 0.0)
+    if n_pad != n:
+        tiles = jnp.pad(tiles, ((0, 0), (0, 0), (0, n_pad - n)))
+    return tiles
 
 
-@functools.partial(
-    jax.jit, static_argnames=("eps", "dim_block", "shortc", "return_mask")
-)
-def _eval_chunk_jnp(
-    tiles_pts, tile_len, pair_a, pair_b, *, eps, dim_block, shortc, return_mask
+def eval_tile_pairs(
+    tiles_pts,
+    tile_len,
+    pair_a,
+    pair_b,
+    eps,
+    *,
+    dim_block: int,
+    shortc: bool = True,
+    backend: str = "jnp",
+    return_mask: bool = False,
+    interpret: bool = True,
 ):
+    """Traceable tile-pair evaluation shared by both backends.
+
+    ``eps`` may be a python float or a traced f32 scalar.  Returns
+    ``(counts (P,T) int32, skipped (P,) int32[, mask (P,T,T) int8])``.
+    Safe to call inside an enclosing ``jax.jit`` (the engine does).
+    """
+    if backend == "pallas":
+        res = distance_tile.tile_pair_distance(
+            tiles_pts, tile_len, pair_a, pair_b,
+            eps=eps, dim_block=dim_block, interpret=interpret,
+            return_mask=return_mask,
+        )
+        counts, skipped = res[0], res[1][:, 0]
+        if not shortc:  # kernel always short-circuits; zero the stat
+            skipped = jnp.zeros_like(skipped)
+        return (counts, skipped, res[2]) if return_mask else (counts, skipped)
+    return _eval_jnp(
+        tiles_pts, tile_len, pair_a, pair_b, eps,
+        dim_block=dim_block, shortc=shortc, return_mask=return_mask,
+    )
+
+
+def _eval_jnp(
+    tiles_pts, tile_len, pair_a, pair_b, eps, *, dim_block, shortc, return_mask
+):
+    """Pure-jnp blocked evaluation (traceable; ``eps`` may be traced)."""
     t = tiles_pts.shape[1]
     n_pad = tiles_pts.shape[2]
     p = pair_a.shape[0]
@@ -64,7 +144,7 @@ def _eval_chunk_jnp(
     valid = (rows[None, :, None] < la[:, None, None]) & (
         rows[None, None, :] < lb[:, None, None]
     )
-    eps2 = jnp.float32(eps) ** 2
+    eps2 = jnp.asarray(eps, jnp.float32) ** 2
     neg_large = jnp.float32(3.0e38)
 
     if not shortc:
@@ -111,6 +191,21 @@ def _eval_chunk_jnp(
     return counts, skipped
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("dim_block", "shortc", "backend", "return_mask", "interpret"),
+)
+def _eval_chunk(
+    tiles_pts, tile_len, pair_a, pair_b, eps,
+    *, dim_block, shortc, backend, return_mask, interpret
+):
+    return eval_tile_pairs(
+        tiles_pts, tile_len, pair_a, pair_b, eps,
+        dim_block=dim_block, shortc=shortc, backend=backend,
+        return_mask=return_mask, interpret=interpret,
+    )
+
+
 def tile_counts(
     tiles_pts: np.ndarray,
     tile_len: np.ndarray,
@@ -126,31 +221,14 @@ def tile_counts(
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Counts (P, T) and SHORTC-skipped block counts (P,) for all pairs."""
     out_counts, out_skipped = [], []
+    tiles_j = jnp.asarray(tiles_pts)
+    len_j = jnp.asarray(tile_len)
     for c, pa, pb, real in _chunks(pair_a, pair_b, chunk):
-        if backend == "pallas":
-            res = distance_tile.tile_pair_distance(
-                jnp.asarray(tiles_pts),
-                jnp.asarray(tile_len),
-                pa,
-                pb,
-                eps=eps,
-                dim_block=dim_block,
-                interpret=interpret,
-            )
-            counts, skipped = res[0], res[1][:, 0]
-            if not shortc:  # kernel always short-circuits; zero the stat
-                skipped = jnp.zeros_like(skipped)
-        else:
-            counts, skipped = _eval_chunk_jnp(
-                jnp.asarray(tiles_pts),
-                jnp.asarray(tile_len),
-                pa,
-                pb,
-                eps=eps,
-                dim_block=dim_block,
-                shortc=shortc,
-                return_mask=False,
-            )
+        counts, skipped = _eval_chunk(
+            tiles_j, len_j, pa, pb, eps,
+            dim_block=dim_block, shortc=shortc, backend=backend,
+            return_mask=False, interpret=interpret,
+        )
         out_counts.append(np.asarray(counts)[:real])
         out_skipped.append(np.asarray(skipped)[:real])
     if not out_counts:
@@ -173,29 +251,14 @@ def tile_mask(
 ):
     """Yield (pair_slice_start, mask (Pc, T, T) int8 numpy) per chunk."""
     done = 0
+    tiles_j = jnp.asarray(tiles_pts)
+    len_j = jnp.asarray(tile_len)
     for c, pa, pb, real in _chunks(pair_a, pair_b, chunk):
-        if backend == "pallas":
-            _, _, mask = distance_tile.tile_pair_distance(
-                jnp.asarray(tiles_pts),
-                jnp.asarray(tile_len),
-                pa,
-                pb,
-                eps=eps,
-                dim_block=dim_block,
-                interpret=interpret,
-                return_mask=True,
-            )
-        else:
-            _, _, mask = _eval_chunk_jnp(
-                jnp.asarray(tiles_pts),
-                jnp.asarray(tile_len),
-                pa,
-                pb,
-                eps=eps,
-                dim_block=dim_block,
-                shortc=True,
-                return_mask=True,
-            )
+        _, _, mask = _eval_chunk(
+            tiles_j, len_j, pa, pb, eps,
+            dim_block=dim_block, shortc=True, backend=backend,
+            return_mask=True, interpret=interpret,
+        )
         yield done, np.asarray(mask)[:real]
         done += real
 

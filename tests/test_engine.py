@@ -1,0 +1,166 @@
+"""Device-resident SelfJoinEngine vs the brute-force and host-loop oracles."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    SelfJoinConfig,
+    SelfJoinEngine,
+    self_join,
+    self_join_hostloop,
+)
+from repro.core import batching as batching_mod
+from repro.core.brute import brute_counts, brute_pairs
+from repro.data import clustered_dataset, exponential_dataset, uniform_dataset
+
+
+def _pair_set(pairs):
+    return set(map(tuple, np.asarray(pairs).tolist()))
+
+
+DATASETS = [
+    ("exp16", exponential_dataset(500, 16, seed=21), 0.06),
+    ("clustered32", clustered_dataset(400, 32, cluster_std=0.05, seed=22), 0.25),
+    ("uniform8", uniform_dataset(400, 8, seed=23), 0.3),
+]
+
+
+@pytest.mark.parametrize("name,d,eps", DATASETS, ids=[x[0] for x in DATASETS])
+def test_engine_counts_and_pairs_match_brute(name, d, eps):
+    cfg = SelfJoinConfig(eps=eps, k=4, tile_size=16, dim_block=8)
+    eng = SelfJoinEngine(d, cfg)
+    res_c = eng.count()
+    res_p = eng.pairs()
+    np.testing.assert_array_equal(res_c.counts, brute_counts(d, eps))
+    np.testing.assert_array_equal(res_p.counts, res_c.counts)
+    assert _pair_set(res_p.pairs) == _pair_set(brute_pairs(d, eps))
+    assert len(res_p.pairs) == res_p.stats.num_results
+    assert res_c.stats.num_chunks >= 1
+
+
+def test_engine_matches_hostloop_exactly():
+    d = exponential_dataset(400, 16, seed=24)
+    cfg = SelfJoinConfig(eps=0.07, k=4, tile_size=16, dim_block=8)
+    old = self_join_hostloop(d, cfg, return_pairs=True)
+    new = SelfJoinEngine(d, cfg).pairs()
+    np.testing.assert_array_equal(new.counts, old.counts)
+    assert _pair_set(new.pairs) == _pair_set(old.pairs)
+    assert new.stats.num_candidates == old.stats.num_candidates
+
+
+def test_engine_eps_zero_duplicates():
+    # eps=0 degenerates to duplicate detection: counts = multiplicity
+    # (1/64-quantized so the fp32 matmul form gives exact zero distances)
+    rng = np.random.default_rng(25)
+    base = (np.round(rng.random((60, 6)) * 64) / 64).astype(np.float32)
+    d = np.concatenate([base, base[:20], base[:5]])  # dup groups of 2 and 3
+    cfg = SelfJoinConfig(eps=0.0, k=3, tile_size=8, dim_block=8)
+    eng = SelfJoinEngine(d, cfg)
+    res = eng.pairs()
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.0))
+    assert _pair_set(res.pairs) == _pair_set(brute_pairs(d, 0.0))
+    # also through the public wrapper
+    np.testing.assert_array_equal(self_join(d, cfg).counts, res.counts)
+
+
+def test_engine_duplicate_points_eps_positive():
+    d = np.tile(np.random.default_rng(26).random((30, 5)).astype(np.float32), (3, 1))
+    cfg = SelfJoinConfig(eps=0.1, k=3, tile_size=8, dim_block=8)
+    res = SelfJoinEngine(d, cfg).pairs()
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.1))
+    assert _pair_set(res.pairs) == _pair_set(brute_pairs(d, 0.1))
+
+
+def test_engine_dims_smaller_than_dim_block():
+    d = uniform_dataset(300, 3, seed=27)  # n=3 pads to dim_block=32
+    cfg = SelfJoinConfig(eps=0.2, k=2)    # default tile_size/dim_block
+    res = SelfJoinEngine(d, cfg).pairs()
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.2))
+    assert _pair_set(res.pairs) == _pair_set(brute_pairs(d, 0.2))
+
+
+def test_engine_empty_and_tiny_inputs():
+    cfg = SelfJoinConfig(eps=0.1, k=2)
+    empty = np.zeros((0, 8), np.float32)
+    eng = SelfJoinEngine(empty, cfg)
+    assert eng.count().counts.shape == (0,)
+    assert eng.pairs().pairs.shape == (0, 2)
+    one = np.random.default_rng(0).random((1, 8)).astype(np.float32)
+    res = SelfJoinEngine(one, cfg).pairs()
+    assert res.counts.tolist() == [1]
+    assert _pair_set(res.pairs) == {(0, 0)}
+
+
+def test_engine_pairs_overflow_raises_cleanly():
+    d = exponential_dataset(300, 8, seed=28)
+    cfg = SelfJoinConfig(eps=0.2, k=3, tile_size=16, dim_block=8)
+    eng = SelfJoinEngine(d, cfg)
+    total = eng.count().stats.num_results
+    assert total > 10
+    with pytest.raises(RuntimeError, match="max_pairs"):
+        eng.pairs(max_pairs=total - 1)
+    # the engine stays usable after an overflow
+    res = eng.pairs(max_pairs=total)
+    assert len(res.pairs) == total
+
+
+def test_engine_auto_grow_recovers_from_bad_estimate(monkeypatch):
+    d = (np.round(uniform_dataset(400, 4, seed=29) * 64) / 64).astype(np.float32)
+    eps = 0.5  # dense: far more than the 4096-row floor
+    monkeypatch.setattr(
+        batching_mod, "estimate_result_size", lambda *a, **k: 1
+    )
+    cfg = SelfJoinConfig(eps=eps, k=2, tile_size=16, dim_block=8)
+    res = SelfJoinEngine(d, cfg).pairs()
+    assert res.stats.overflow_retries > 0
+    np.testing.assert_array_equal(res.counts, brute_counts(d, eps))
+    assert len(res.pairs) == res.stats.num_results > 4096
+
+
+def test_engine_reuse_across_eps_matches_fresh_runs():
+    d = exponential_dataset(350, 16, seed=30)
+    eps_values = [0.04, 0.08, 0.12]
+    cfg = SelfJoinConfig(eps=max(eps_values), k=4, tile_size=16, dim_block=8)
+    eng = SelfJoinEngine(d, cfg)
+    swept = eng.query(eps_values, return_pairs=True)
+    for eps, res in zip(eps_values, swept):
+        fresh = self_join(
+            d, dataclasses.replace(cfg, eps=eps), return_pairs=True
+        )
+        np.testing.assert_array_equal(res.counts, fresh.counts)
+        assert _pair_set(res.pairs) == _pair_set(fresh.pairs)
+    # sweeping upward transparently rebuilds the index
+    bigger = eng.count(0.2)
+    np.testing.assert_array_equal(bigger.counts, brute_counts(d, 0.2))
+
+
+def test_engine_pallas_backend_parity():
+    d = exponential_dataset(250, 16, seed=31)
+    base = SelfJoinConfig(eps=0.08, k=4, tile_size=16, dim_block=8)
+    r_jnp = SelfJoinEngine(d, base).pairs()
+    r_pl = SelfJoinEngine(
+        d, dataclasses.replace(base, use_pallas=True)
+    ).pairs()
+    np.testing.assert_array_equal(r_jnp.counts, r_pl.counts)
+    assert _pair_set(r_jnp.pairs) == _pair_set(r_pl.pairs)
+
+
+def test_engine_count_shortc_stats_match_hostloop():
+    d = exponential_dataset(400, 64, seed=32)
+    cfg = SelfJoinConfig(eps=0.1, k=6, tile_size=16, dim_block=8)
+    old = self_join_hostloop(d, cfg)
+    new = SelfJoinEngine(d, cfg).count()
+    np.testing.assert_array_equal(new.counts, old.counts)
+    assert new.stats.dim_blocks_skipped == old.stats.dim_blocks_skipped
+    assert new.stats.dim_blocks_total == old.stats.dim_blocks_total
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(count_chunk=0)
+    with pytest.raises(ValueError):
+        EngineConfig(max_pairs=-1)
+    with pytest.raises(ValueError):
+        SelfJoinConfig(eps=-0.1)

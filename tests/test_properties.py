@@ -1,6 +1,13 @@
-"""Property-based tests (hypothesis) for the self-join invariants."""
+"""Property-based tests (hypothesis) for the self-join invariants.
+
+Skipped gracefully when hypothesis is absent (it is a dev-only dependency;
+see requirements-dev.txt).
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import SelfJoinConfig, self_join
 from repro.core.brute import brute_counts
