@@ -1,21 +1,26 @@
-# Convenience targets; `make ci` mirrors .github/workflows/ci.yml, except
-# the workflow additionally deselects two pre-existing seed failures
-# (see ROADMAP.md open items) -- `make test` runs the full tier-1 command.
+# Convenience targets; `make ci` mirrors .github/workflows/ci.yml.
 
 PYTHON ?= python
 
-.PHONY: install ci test bench-engine quickstart
+.PHONY: install ci test bench-engine bench-smoke quickstart
 
 install:
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
-ci: install test
+ci: install test bench-smoke
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q
 
 bench-engine:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/bench_engine.py
+
+# Tiny-configuration runs of the distributed benchmarks (ring ppermute wire
+# pass + entity-partition balance on the indexed engine) so the distributed
+# tier cannot silently rot between PRs.
+bench-smoke:
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -3,9 +3,13 @@
 Measures the ring-pass (ppermute) wall time on 8 host devices in a
 subprocess (BSP supersteps, paper Sec. 6.3) and reports the analytic wire
 model: (|p|-1) * |D| elements total, |D| - |D|/|p| sent per node.
+
+``--tiny`` (or BENCH_SMOKE=1) shrinks |D| so `make bench-smoke` can keep
+this path compiling and running in CI-scale time.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -22,6 +26,7 @@ SCRIPT = textwrap.dedent(
     sys.path.insert(0, sys.argv[1])
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import compat
     mesh = jax.make_mesh((8,), ("data",))
     n, dims = int(sys.argv[2]), int(sys.argv[3])
     x = jnp.zeros((n, dims), jnp.float32)
@@ -33,7 +38,7 @@ SCRIPT = textwrap.dedent(
             return jax.lax.ppermute(e, "data", perm)
         return jax.lax.fori_loop(0, 7, body, v)
 
-    f = jax.jit(jax.shard_map(ring, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+    f = jax.jit(compat.shard_map(ring, mesh=mesh, in_specs=P("data"), out_specs=P("data")))
     f(x).block_until_ready()  # compile
     t0 = time.perf_counter()
     for _ in range(3):
@@ -42,15 +47,20 @@ SCRIPT = textwrap.dedent(
     """
 )
 
+FULL_CELLS = [("Syn16D2M", 40_000, 16), ("SuSy", 40_000, 18)]
+TINY_CELLS = [("Syn16D2M", 2_000, 16), ("SuSy", 2_000, 18)]
 
-def run():
+
+def run(tiny: bool = False):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
-    for name, n, dims in [("Syn16D2M", 40_000, 16), ("SuSy", 40_000, 18)]:
+    for name, n, dims in (TINY_CELLS if tiny else FULL_CELLS):
         out = subprocess.run(
             [sys.executable, "-c", SCRIPT, src, str(n), str(dims)],
             capture_output=True, text=True, timeout=600,
             env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
         )
+        if out.returncode != 0:
+            raise RuntimeError(f"ring subprocess failed:\n{out.stderr[-2000:]}")
         us = float(out.stdout.split("RING_US")[-1].strip().split()[0])
         elems = ring_comm_elements(n, 8)
         record(
@@ -61,4 +71,10 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny", action="store_true",
+        default=os.environ.get("BENCH_SMOKE") == "1",
+        help="CI-scale configuration (also via BENCH_SMOKE=1)",
+    )
+    run(tiny=ap.parse_args().tiny)

@@ -23,12 +23,15 @@ def run():
     with open(TIMES_FILE) as f:
         data = json.load(f)
     for name, times in data.items():
-        rows = simulate_scaling(np.asarray(times), [1, 2, 4, 8, 16, 32])
-        for p, t, speedup in rows:
-            record(
-                f"fig11/{name}/p={p}", t * 1e6,
-                f"speedup={speedup:.2f};ideal={p};efficiency={speedup / p:.3f}",
+        for mode in ("round_robin", "dynamic"):
+            rows = simulate_scaling(
+                np.asarray(times), [1, 2, 4, 8, 16, 32], assignment=mode
             )
+            for p, t, speedup in rows:
+                record(
+                    f"fig11/{name}/{mode}/p={p}", t * 1e6,
+                    f"speedup={speedup:.2f};ideal={p};efficiency={speedup / p:.3f}",
+                )
 
 
 if __name__ == "__main__":

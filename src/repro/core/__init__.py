@@ -8,6 +8,7 @@ from repro.core.types import (  # noqa: F401
 )
 from repro.core.selfjoin import self_join, self_join_hostloop  # noqa: F401
 from repro.core.engine import SelfJoinEngine  # noqa: F401
+from repro.core.dist_engine import DistributedSelfJoinEngine  # noqa: F401
 from repro.core.reorder import variance_reorder, estimate_dim_variance  # noqa: F401
 from repro.core.grid import build_grid, build_tile_plan, GridIndex, TilePlan  # noqa: F401
 from repro.core.tuning import estimate_k_costs, select_k  # noqa: F401

@@ -1,0 +1,72 @@
+"""JAX version-compatibility shims for the distributed tier.
+
+The distributed ring join sits on two APIs whose spelling moved across JAX
+releases:
+
+``shard_map``
+    new releases export it as ``jax.shard_map``; older ones (e.g. 0.4.x)
+    only have ``jax.experimental.shard_map.shard_map``.
+
+``pvary`` / ``pcast``
+    newer shard_map enforces varying-manual-axes (vma) typing on loop
+    carries, so a replicated zeros-carry must be explicitly cast to
+    device-varying.  Releases that predate vma tracking have neither
+    spelling -- and do not need the cast, so the correct fallback is a
+    no-op, not an AttributeError.
+
+Everything that touches the ring path (``core/distributed.py``,
+``launch/selfjoin_dryrun.py``, ``benchmarks/bench_comm.py``) must import
+these shims instead of reaching into ``jax`` directly.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_shard_map():
+    """Return the ``shard_map`` callable for this JAX version."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm_experimental
+
+    return sm_experimental
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with the ``jax.experimental`` fallback applied."""
+    return resolve_shard_map()(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def axis_size(axes):
+    """Size of one or more shard_map axes, inside the sharded function.
+
+    Uses ``jax.lax.axis_size`` where available and falls back to
+    ``jax.lax.psum(1, axes)``, which constant-folds to a Python int for the
+    unit input on every release old enough to lack ``axis_size``.
+    """
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    size_fn = getattr(jax.lax, "axis_size", None)
+    if size_fn is not None:
+        size = 1
+        for a in axes_t:
+            size *= size_fn(a)
+        return size
+    return int(jax.lax.psum(1, axes_t))
+
+
+def pvary(x, axes):
+    """Cast ``x`` to device-varying over ``axes`` where the API exists.
+
+    Tries the ``jax.lax.pcast(..., to="varying")`` spelling first, then
+    ``jax.lax.pvary``; on versions with neither (no vma tracking in
+    shard_map) the cast is unnecessary and ``x`` is returned unchanged.
+    """
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is not None:
+        return pcast(x, axes_t, to="varying")
+    pvary_fn = getattr(jax.lax, "pvary", None)
+    if pvary_fn is not None:
+        return pvary_fn(x, axes_t)
+    return x

@@ -12,10 +12,16 @@ collective-permute uses ICI neighbour links only (no all-gather), so peak
 per-device memory stays at 2 shards and the per-round communication is
 exactly |D|/|p| points, totalling (|p|-1)|D| elements as derived in the paper.
 Compute of round i overlaps the permute of round i+1 on real hardware (XLA
-schedules the independent ops concurrently); the local join is the dense
-blocked distance count -- the same regular MXU work the tile kernel performs,
-here without the host-side grid since every (Q_k, E_j) block pair must be
-evaluated anyway during the rotation.
+schedules the independent ops concurrently).
+
+This module is the **wire-protocol reference**: its local join is a dense
+blocked distance count, which evaluates every (Q_k, E_j) point pair and
+therefore discards the grid index's candidate filtering -- the paper's
+per-worker design keeps the full indexed join on every processing element.
+The production path is ``core/dist_engine.py`` (DESIGN.md #7), which runs
+each ring round through the per-shard grid index; keep this dense ring for
+transport measurement (`benchmarks/bench_comm.py`) and as the end-to-end
+``shard_map`` correctness oracle.
 
 Works unchanged on a 1-axis mesh ("data") or the joint ("pod","data") axes of
 the production mesh -- the ring simply spans both (inter-pod DCI hops occur
@@ -30,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import compat
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -69,9 +77,7 @@ def make_ring_counts_fn(mesh: Mesh, axes: AxisNames, eps: float, row_block: int 
     eps2 = float(eps) ** 2
 
     def local(d_block):
-        psize = 1
-        for a in axes_t:
-            psize *= jax.lax.axis_size(a)
+        psize = compat.axis_size(axes_t)
         q = d_block
         perm = _ring_perm(psize)
 
@@ -82,18 +88,15 @@ def make_ring_counts_fn(mesh: Mesh, axes: AxisNames, eps: float, row_block: int 
             return counts, e
 
         counts0 = jnp.zeros(q.shape[0], jnp.int32)
-        # the carry must be device-varying over the mesh axes (shard_map vma)
-        pcast = getattr(jax.lax, "pcast", None)
-        if pcast is not None:
-            counts0 = pcast(counts0, axes_t, to="varying")
-        else:  # older spelling
-            counts0 = jax.lax.pvary(counts0, axes_t)
+        # the carry must be device-varying over the mesh axes on shard_map
+        # versions with vma tracking; a no-op on versions without (compat)
+        counts0 = compat.pvary(counts0, axes_t)
         counts, _ = jax.lax.fori_loop(0, psize, body, (counts0, q))
         return counts
 
     spec = P(axes_t if len(axes_t) > 1 else axes_t[0])
     return jax.jit(
-        jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
+        compat.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)
     )
 
 

@@ -39,7 +39,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batching as batching_mod
-from repro.core.grid import GridIndex, TilePlan, build_grid, build_tile_plan
+from repro.core.grid import (
+    GridIndex,
+    TilePlan,
+    build_grid,
+    build_query_tile_plan,
+    build_tile_plan,
+)
 from repro.core.reorder import variance_reorder
 from repro.core.types import (
     EngineConfig,
@@ -309,6 +315,78 @@ class SelfJoinEngine:
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
         stats.dim_blocks_total = self.plan.num_pairs * self._num_dim_blocks
+        return SelfJoinResult(counts=counts, stats=stats)
+
+    def count_query(self, q: np.ndarray, eps: Optional[float] = None) -> SelfJoinResult:
+        """Per-query-point counts of indexed points within eps of each q.
+
+        The bipartite sub-plan of the distributed tier (DESIGN.md #7):
+        external query points are binned into this engine's grid, tiled, and
+        each (query tile, adjacent data tile) candidate pair runs through the
+        same chunked count program as the self-join -- index filtering, SHORTC
+        and SORTIDU included.  ``q`` is given in ORIGINAL coordinates (the
+        engine applies its own REORDER permutation); counts come back in
+        ``q``'s row order.  Self-joining the engine's own dataset equals
+        ``count()``:  ``count_query(d).counts == count().counts``.
+        """
+        eps = self.config.eps if eps is None else float(eps)
+        q_pts = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
+        nq = q_pts.shape[0]
+        cfg, eng = self.config, self.engine
+        if nq == 0 or self.num_points == 0:
+            return SelfJoinResult(
+                counts=np.zeros(nq, np.int64), stats=self._base_stats(eps)
+            )
+        self._ensure_index(eps)
+        q_work = q_pts[:, self._perm] if self._perm is not None else q_pts
+        qplan = build_query_tile_plan(self.grid, self.plan, q_work, cfg.sortidu)
+
+        stats = self._base_stats(eps)
+        stats.num_points = nq
+        stats.num_tile_pairs_total = qplan.num_tile_pairs_total
+        stats.num_tile_pairs_evaluated = qplan.num_pairs
+        stats.num_candidates = qplan.num_candidates
+        stats.num_tiles = qplan.num_q_tiles + self.plan.num_tiles
+
+        q_tile_start = jnp.asarray(qplan.q_tile_start, jnp.int32)
+        q_tile_len = jnp.asarray(qplan.q_tile_len, jnp.int32)
+        q_tiles = ops.make_tiles_device(
+            jnp.asarray(qplan.q_sorted),
+            q_tile_start,
+            q_tile_len,
+            tile_size=cfg.tile_size,
+            dim_block=cfg.dim_block,
+        )
+        # combined tile table: query tiles first, data tiles after -- the
+        # existing chunk program evaluates A x B tiles out of one array, so
+        # the bipartite join is just an index offset on the B side.  A-side
+        # tile_start addresses the q-sorted position space; B-side values are
+        # never used for scatter (only pair_a rows are accumulated).
+        tiles = jnp.concatenate([q_tiles, self._tiles], axis=0)
+        tile_len = jnp.concatenate([q_tile_len, self._tile_len])
+        tile_start = jnp.concatenate([q_tile_start, self._tile_start])
+        pair_b_off = qplan.pair_d.astype(np.int64) + qplan.num_q_tiles
+
+        counts_sorted = jnp.zeros(nq, jnp.int32)
+        skipped_tot = jnp.zeros((), jnp.int32)
+        for _, pa, pb, real in ops._chunks(
+            qplan.pair_q, pair_b_off.astype(np.int32), eng.count_chunk
+        ):
+            counts_sorted, skipped_tot = _count_chunk_program(
+                counts_sorted, skipped_tot,
+                tiles, tile_len, tile_start,
+                pa, pb, real, eps,
+                dim_block=cfg.dim_block, shortc=cfg.shortc,
+                backend="pallas" if cfg.use_pallas else "jnp",
+                interpret=eng.interpret,
+            )
+            stats.num_chunks += 1
+        counts = np.asarray(
+            _unsort_counts(counts_sorted, jnp.asarray(qplan.q_order, jnp.int32))
+        ).astype(np.int64)
+        stats.num_results = int(counts.sum())
+        stats.dim_blocks_skipped = int(skipped_tot)
+        stats.dim_blocks_total = qplan.num_pairs * self._num_dim_blocks
         return SelfJoinResult(counts=counts, stats=stats)
 
     def pairs(

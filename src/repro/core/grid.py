@@ -30,6 +30,7 @@ class GridIndex:
     k: int
     n: int
     u_dim: int                     # SORTIDU dimension (first un-indexed, or last indexed if k == n)
+    origin: np.ndarray             # (k,) int64 cell-coordinate offset (per-dim min)
     cells_per_dim: np.ndarray      # (k,) int64
     strides: np.ndarray            # (k,) int64
     point_order: np.ndarray        # (N,) int64; pts_sorted[i] == D[point_order[i]]
@@ -42,6 +43,42 @@ class GridIndex:
     @property
     def num_cells(self) -> int:
         return int(self.cell_ids.shape[0])
+
+    @property
+    def bin_width(self) -> float:
+        """Cell edge length (eps, or 1.0 for the degenerate eps == 0 grid)."""
+        return self.eps if self.eps > 0 else 1.0
+
+
+@dataclasses.dataclass
+class QueryTilePlan:
+    """Bipartite work list: evaluate q_sorted[Q tile] x pts_sorted[D tile].
+
+    The distributed tier's per-round local join (DESIGN.md #7): external
+    query points Q are binned into an existing ``GridIndex`` over D, and the
+    candidate set is the 3^k adjacent-cell cross product at tile granularity
+    -- the same index filtering as the self-join, for an arbitrary query set.
+    ``pair_q`` indexes the query tiling here; ``pair_d`` indexes the data
+    grid's own ``TilePlan`` tiles.
+    """
+
+    tile_size: int
+    q_order: np.ndarray            # (Nq,) int64; q_sorted[i] == Q[q_order[i]]
+    q_sorted: np.ndarray           # (Nq, n) float32, cell- then u-sorted
+    q_tile_start: np.ndarray       # (num_q_tiles,) int32 into q_sorted
+    q_tile_len: np.ndarray         # (num_q_tiles,) int32, 1..tile_size
+    pair_q: np.ndarray             # (P,) int32 query-tile index
+    pair_d: np.ndarray             # (P,) int32 data-tile index (into TilePlan)
+    num_tile_pairs_total: int      # before SORTIDU window pruning
+    num_candidates: int            # sum(q_len * d_len) over evaluated pairs
+
+    @property
+    def num_q_tiles(self) -> int:
+        return int(self.q_tile_start.shape[0])
+
+    @property
+    def num_pairs(self) -> int:
+        return int(self.pair_q.shape[0])
 
 
 @dataclasses.dataclass
@@ -88,6 +125,7 @@ def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
         coords -= cmin  # origin at 0 per dim
         cells_per_dim = coords.max(axis=0).astype(np.int64) + 1
     else:
+        cmin = np.zeros(k, dtype=np.int64)
         cells_per_dim = np.ones(k, dtype=np.int64)
 
     # linearization strides; fall back to row-rank ids on (theoretical) overflow
@@ -116,6 +154,7 @@ def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
         k=k,
         n=n,
         u_dim=u_dim,
+        origin=cmin,
         cells_per_dim=cells_per_dim,
         strides=strides,
         point_order=order.astype(np.int64),
@@ -127,57 +166,78 @@ def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
     )
 
 
+def _neighbor_offsets(k: int) -> np.ndarray:
+    """The (3^k, k) array of {-1, 0, 1} cell-coordinate offsets (Fig. 1)."""
+    return np.stack(
+        np.meshgrid(*([np.array([-1, 0, 1], dtype=np.int64)] * k), indexing="ij"),
+        axis=-1,
+    ).reshape(-1, k)
+
+
 def adjacent_cell_pairs(grid: GridIndex) -> Tuple[np.ndarray, np.ndarray]:
     """All ordered (cell, non-empty adjacent cell) index pairs.
 
     For every non-empty cell the 3^k neighbourhood (paper Fig. 1) is probed
     with a vectorized binary search into the sorted non-empty ids -- the same
     ``|D| * 3^k * log2(|G|)`` search structure the paper models in Sec. 5.6,
-    but amortized per *cell* instead of per point.
+    but amortized per *cell* instead of per point.  The self-join case is
+    the bipartite probe applied to the grid's own cells.
     """
-    c = grid.num_cells
-    if c == 0:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    if not grid.strides.any() and grid.k > 1:  # pragma: no cover - rank-id fallback
-        return _adjacent_cell_pairs_dict(grid)
-
-    k = grid.k
-    offsets = np.stack(
-        np.meshgrid(*([np.array([-1, 0, 1], dtype=np.int64)] * k), indexing="ij"),
-        axis=-1,
-    ).reshape(-1, k)
-    out_a, out_b = [], []
-    for off in offsets:
-        ncoords = grid.cell_coords + off[None, :]
-        in_bounds = np.all(
-            (ncoords >= 0) & (ncoords < grid.cells_per_dim[None, :]), axis=1
-        )
-        nids = ncoords @ grid.strides
-        pos = np.searchsorted(grid.cell_ids, nids)
-        pos_c = np.minimum(pos, c - 1)
-        found = in_bounds & (grid.cell_ids[pos_c] == nids)
-        src = np.nonzero(found)[0]
-        out_a.append(src)
-        out_b.append(pos_c[src])
-    return np.concatenate(out_a), np.concatenate(out_b)
+    return _probe_query_cells(grid, grid.cell_coords)
 
 
-def _adjacent_cell_pairs_dict(grid: GridIndex) -> Tuple[np.ndarray, np.ndarray]:
-    """Dict-based fallback when linearized ids would overflow int64."""
-    lookup = {tuple(cc): i for i, cc in enumerate(grid.cell_coords)}
-    k = grid.k
-    offsets = np.stack(
-        np.meshgrid(*([np.array([-1, 0, 1], dtype=np.int64)] * k), indexing="ij"),
-        axis=-1,
-    ).reshape(-1, k)
-    out_a, out_b = [], []
-    for i, cc in enumerate(grid.cell_coords):
-        for off in offsets:
-            j = lookup.get(tuple(cc + off))
-            if j is not None:
-                out_a.append(i)
-                out_b.append(j)
-    return np.asarray(out_a, np.int64), np.asarray(out_b, np.int64)
+def split_cells_into_tiles(
+    cell_start: np.ndarray, cell_count: np.ndarray, tile_size: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Split each cell's contiguous point run into fixed-size tiles.
+
+    Returns ``(tile_start, tile_len, tile_cell, cell_tile_first)`` -- the
+    shared tiling step of the self-join plan (cells of D vs. themselves) and
+    the bipartite query plan (cells of Q vs. cells of D).
+    """
+    t = int(tile_size)
+    counts = cell_count
+    n_tiles_per_cell = (counts + t - 1) // t if counts.size else counts
+    tile_cell = np.repeat(
+        np.arange(cell_start.shape[0], dtype=np.int64), n_tiles_per_cell
+    )
+    if tile_cell.size:
+        cell_tile_first = np.concatenate([[0], np.cumsum(n_tiles_per_cell)[:-1]])
+        within = np.arange(tile_cell.size, dtype=np.int64) - cell_tile_first[tile_cell]
+        tile_start = cell_start[tile_cell] + within * t
+        tile_end = np.minimum(tile_start + t, cell_start[tile_cell] + counts[tile_cell])
+        tile_len = tile_end - tile_start
+    else:
+        cell_tile_first = np.zeros(0, np.int64)
+        tile_start = np.zeros(0, np.int64)
+        tile_len = np.zeros(0, np.int64)
+    return tile_start, tile_len, tile_cell, cell_tile_first
+
+
+def _expand_cell_pairs_to_tile_pairs(
+    ca: np.ndarray,
+    cb: np.ndarray,
+    n_tiles_per_cell_a: np.ndarray,
+    n_tiles_per_cell_b: np.ndarray,
+    cell_tile_first_a: np.ndarray,
+    cell_tile_first_b: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Expand each (cell a, cell b) pair into its tiles(a) x tiles(b) grid."""
+    na, nb = n_tiles_per_cell_a[ca], n_tiles_per_cell_b[cb]
+    reps = na * nb
+    pair_cell_a = np.repeat(ca, reps)
+    pair_cell_b = np.repeat(cb, reps)
+    if reps.size:
+        offs = np.concatenate([[0], np.cumsum(reps)[:-1]])
+        local = np.arange(int(reps.sum()), dtype=np.int64) - np.repeat(offs, reps)
+        la = local // np.repeat(nb, reps)
+        lb = local % np.repeat(nb, reps)
+        pair_a = cell_tile_first_a[pair_cell_a] + la
+        pair_b = cell_tile_first_b[pair_cell_b] + lb
+    else:
+        pair_a = np.zeros(0, np.int64)
+        pair_b = np.zeros(0, np.int64)
+    return pair_a, pair_b
 
 
 def build_tile_plan(
@@ -196,39 +256,18 @@ def build_tile_plan(
     t = int(tile_size)
     counts = grid.cell_count
     n_tiles_per_cell = (counts + t - 1) // t if counts.size else counts
-    tile_cell = np.repeat(np.arange(grid.num_cells, dtype=np.int64), n_tiles_per_cell)
-    # tile index within its cell
-    if tile_cell.size:
-        cell_tile_first = np.concatenate([[0], np.cumsum(n_tiles_per_cell)[:-1]])
-        within = np.arange(tile_cell.size, dtype=np.int64) - cell_tile_first[tile_cell]
-        tile_start = grid.cell_start[tile_cell] + within * t
-        tile_end = np.minimum(tile_start + t, grid.cell_start[tile_cell] + counts[tile_cell])
-        tile_len = tile_end - tile_start
-    else:
-        cell_tile_first = np.zeros(0, np.int64)
-        tile_start = np.zeros(0, np.int64)
-        tile_len = np.zeros(0, np.int64)
+    tile_start, tile_len, tile_cell, cell_tile_first = split_cells_into_tiles(
+        grid.cell_start, counts, t
+    )
 
     if cell_pairs is None:
         cell_pairs = adjacent_cell_pairs(grid)
     ca, cb = cell_pairs
 
-    # expand each (cell a, cell b) into tiles(a) x tiles(b)
-    na, nb = n_tiles_per_cell[ca], n_tiles_per_cell[cb]
-    reps = na * nb
-    pair_cell_a = np.repeat(ca, reps)
-    pair_cell_b = np.repeat(cb, reps)
-    # within-pair enumeration: for pair p with na*nb combos, local index l
-    if reps.size:
-        offs = np.concatenate([[0], np.cumsum(reps)[:-1]])
-        local = np.arange(int(reps.sum()), dtype=np.int64) - np.repeat(offs, reps)
-        la = local // np.repeat(nb, reps)
-        lb = local % np.repeat(nb, reps)
-        pair_a = cell_tile_first[pair_cell_a] + la
-        pair_b = cell_tile_first[pair_cell_b] + lb
-    else:
-        pair_a = np.zeros(0, np.int64)
-        pair_b = np.zeros(0, np.int64)
+    pair_a, pair_b = _expand_cell_pairs_to_tile_pairs(
+        ca, cb, n_tiles_per_cell, n_tiles_per_cell,
+        cell_tile_first, cell_tile_first,
+    )
 
     total_pairs = int(pair_a.size)
 
@@ -259,6 +298,149 @@ def build_tile_plan(
         tile_cell=tile_cell.astype(np.int32),
         pair_a=pair_a.astype(np.int32),
         pair_b=pair_b.astype(np.int32),
+        num_tile_pairs_total=total_pairs,
+        num_candidates=num_candidates,
+    )
+
+
+def _probe_query_cells(
+    grid: GridIndex, qcell_coords: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """All (probe cell, adjacent non-empty data cell) index pairs.
+
+    ``qcell_coords`` are in the data grid's coordinate frame (origin
+    subtracted) but may lie outside its bounding box -- such probe cells
+    still find whichever of their 3^k neighbours fall inside.  Probing the
+    grid's own ``cell_coords`` yields the self-join adjacency.
+    """
+    cq = qcell_coords.shape[0]
+    c = grid.num_cells
+    if cq == 0 or c == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    k = grid.k
+    offsets = _neighbor_offsets(k)
+    if not grid.strides.any() and k > 1:  # pragma: no cover - rank-id fallback
+        lookup = {tuple(cc): i for i, cc in enumerate(grid.cell_coords)}
+        out_q, out_d = [], []
+        for i, qc in enumerate(qcell_coords):
+            for off in offsets:
+                j = lookup.get(tuple(qc + off))
+                if j is not None:
+                    out_q.append(i)
+                    out_d.append(j)
+        return np.asarray(out_q, np.int64), np.asarray(out_d, np.int64)
+
+    out_q, out_d = [], []
+    for off in offsets:
+        ncoords = qcell_coords + off[None, :]
+        in_bounds = np.all(
+            (ncoords >= 0) & (ncoords < grid.cells_per_dim[None, :]), axis=1
+        )
+        nids = np.where(in_bounds[:, None], ncoords, 0) @ grid.strides
+        pos = np.searchsorted(grid.cell_ids, nids)
+        pos_c = np.minimum(pos, c - 1)
+        found = in_bounds & (grid.cell_ids[pos_c] == nids)
+        src = np.nonzero(found)[0]
+        out_q.append(src)
+        out_d.append(pos_c[src])
+    return np.concatenate(out_q), np.concatenate(out_d)
+
+
+def build_query_tile_plan(
+    grid: GridIndex,
+    plan: TilePlan,
+    q: np.ndarray,
+    sortidu: bool,
+) -> QueryTilePlan:
+    """Bin query points into ``grid`` and emit the Q-tile x D-tile work list.
+
+    ``q`` must be in the same (reordered) coordinate frame as the points the
+    grid was built over.  Queries are grouped by data-grid cell, u-sorted
+    within each group (so SORTIDU windows apply on both sides), tiled at
+    ``plan.tile_size``, and each (query cell, adjacent non-empty data cell)
+    pair contributes its tile cross product.  Correct for any query radius
+    not exceeding ``grid.eps`` (the candidate set is a superset; the
+    distance filter runs at the queried radius).
+    """
+    q_pts = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
+    nq = q_pts.shape[0]
+    t = int(plan.tile_size)
+    k = grid.k
+    if nq == 0:
+        return QueryTilePlan(
+            tile_size=t,
+            q_order=np.zeros(0, np.int64),
+            q_sorted=np.zeros((0, grid.n), np.float32),
+            q_tile_start=np.zeros(0, np.int32),
+            q_tile_len=np.zeros(0, np.int32),
+            pair_q=np.zeros(0, np.int32),
+            pair_d=np.zeros(0, np.int32),
+            num_tile_pairs_total=0,
+            num_candidates=0,
+        )
+
+    coords = (
+        np.floor(q_pts[:, :k].astype(np.float64) / grid.bin_width).astype(np.int64)
+        - grid.origin[None, :]
+    )
+    # group queries by cell; unique rows handle out-of-box coords robustly
+    qcell_coords, inv = np.unique(coords, axis=0, return_inverse=True)
+    order = np.lexsort((q_pts[:, grid.u_dim], inv))
+    q_sorted = np.ascontiguousarray(q_pts[order])
+    qcell_count = np.bincount(inv, minlength=qcell_coords.shape[0]).astype(np.int64)
+    qcell_start = np.concatenate([[0], np.cumsum(qcell_count)[:-1]])
+
+    q_tile_start, q_tile_len, _, q_cell_tile_first = split_cells_into_tiles(
+        qcell_start, qcell_count, t
+    )
+    n_q_tiles_per_cell = (qcell_count + t - 1) // t
+
+    # data-side tiling parameters, reconstructed to match ``plan``'s layout
+    # (same splitting routine build_tile_plan used, so indices line up)
+    d_counts = grid.cell_count
+    n_d_tiles_per_cell = (d_counts + t - 1) // t if d_counts.size else d_counts
+    _, _, _, d_cell_tile_first = split_cells_into_tiles(
+        grid.cell_start, d_counts, t
+    )
+
+    cq, cd = _probe_query_cells(grid, qcell_coords)
+    pair_q, pair_d = _expand_cell_pairs_to_tile_pairs(
+        cq, cd, n_q_tiles_per_cell, n_d_tiles_per_cell,
+        q_cell_tile_first, d_cell_tile_first,
+    )
+    total_pairs = int(pair_q.size)
+
+    if sortidu and pair_q.size:
+        uq = q_sorted[:, grid.u_dim]
+        uq_lo = uq[q_tile_start]
+        uq_hi = uq[q_tile_start + q_tile_len - 1]
+        ud = grid.pts_sorted[:, grid.u_dim]
+        ud_lo = ud[plan.tile_start[pair_d]]
+        ud_hi = ud[plan.tile_start[pair_d] + plan.tile_len[pair_d] - 1]
+        gap_lo = ud_lo - uq_hi[pair_q]         # d entirely above q
+        gap_hi = uq_lo[pair_q] - ud_hi         # q entirely above d
+        keep = np.maximum(gap_lo, gap_hi) <= np.float32(grid.eps)
+        pair_q, pair_d = pair_q[keep], pair_d[keep]
+
+    if pair_q.size:
+        # group by Q tile (A-side VMEM residency, as in build_tile_plan)
+        srt = np.lexsort((pair_d, pair_q))
+        pair_q, pair_d = pair_q[srt], pair_d[srt]
+
+    num_candidates = (
+        int((q_tile_len[pair_q] * plan.tile_len[pair_d].astype(np.int64)).sum())
+        if pair_q.size
+        else 0
+    )
+
+    return QueryTilePlan(
+        tile_size=t,
+        q_order=order.astype(np.int64),
+        q_sorted=q_sorted,
+        q_tile_start=q_tile_start.astype(np.int32),
+        q_tile_len=q_tile_len.astype(np.int32),
+        pair_q=pair_q.astype(np.int32),
+        pair_d=pair_d.astype(np.int32),
         num_tile_pairs_total=total_pairs,
         num_candidates=num_candidates,
     )

@@ -65,13 +65,25 @@ def assign_dynamic(batch_costs: Sequence[float], num_workers: int) -> np.ndarray
     return assignment
 
 
-def simulate_scaling(batch_costs: Sequence[float], workers: Sequence[int]):
-    """Paper Fig. 11: simulated response time/speedup for |p| workers."""
+def simulate_scaling(
+    batch_costs: Sequence[float],
+    workers: Sequence[int],
+    assignment: str = "round_robin",
+):
+    """Paper Fig. 11: simulated response time/speedup for |p| workers.
+
+    ``assignment`` selects the paper's round-robin default or the greedy LPT
+    scheduler (``"dynamic"``), so the straggler-mitigation benefit on skewed
+    batch costs can be simulated directly.
+    """
     costs = np.asarray(batch_costs, dtype=np.float64)
     out = []
     for p in workers:
-        assignment = np.arange(len(costs)) % p
-        t = max(costs[assignment == w].sum() for w in range(p))
+        if assignment == "dynamic":
+            assign = assign_dynamic(costs, p)
+        else:
+            assign = np.arange(len(costs)) % p
+        t = max(costs[assign == w].sum() for w in range(p))
         out.append((p, t))
     t1 = out[0][1] if out else 1.0
     return [(p, t, t1 / t if t else float("inf")) for p, t in out]

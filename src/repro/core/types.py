@@ -83,6 +83,17 @@ class SelfJoinStats:
     num_chunks: int = 0                  # device programs dispatched (engine)
     pairs_capacity: int = 0              # preallocated pairs buffer rows (engine)
     overflow_retries: int = 0            # auto-grow retries in pairs mode (engine)
+    num_workers: int = 0                 # |p| (distributed engine)
+    num_rounds: int = 0                  # ring rounds executed (= |p|)
+    num_candidates_dense: int = 0        # |Q| x |E| sum a dense ring pass would do
+    comm_elements: int = 0               # ring transport volume, (|p|-1)|D| points
+
+    @property
+    def candidate_filter_ratio(self) -> float:
+        """Fraction of the dense candidate volume the index actually evaluated."""
+        if self.num_candidates_dense == 0:
+            return 1.0
+        return self.num_candidates / self.num_candidates_dense
 
     @property
     def selectivity(self) -> float:

@@ -157,6 +157,12 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, sharding_overrides=None):
         ca = compiled.cost_analysis()
     except Exception:
         ca = {}
+    # older jaxlib CPU backends return one dict per partition instead of a
+    # single dict -- normalize before any .get()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        ca = {}
     print(f"[{arch} x {shape}] cost_analysis flops={ca.get('flops')} bytes={ca.get('bytes accessed')}")
 
     report = roofline_terms(

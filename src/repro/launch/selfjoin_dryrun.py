@@ -24,6 +24,7 @@ import jax          # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.core import compat  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_desc  # noqa: E402
 from repro.roofline import roofline_terms  # noqa: E402
 
@@ -50,9 +51,7 @@ def ring_fn(mesh, axes, eps, *, variant="base", row_block=2048):
         return jax.lax.map(one, blocks).reshape(-1)
 
     def body_fn(d_block):
-        psize = 1
-        for a in axes_t:
-            psize *= jax.lax.axis_size(a)
+        psize = compat.axis_size(axes_t)
         perm = [(j, (j + 1) % psize) for j in range(psize)]
         q = d_block
         ax = axes_t if len(axes_t) > 1 else axes_t[0]
@@ -69,13 +68,12 @@ def ring_fn(mesh, axes, eps, *, variant="base", row_block=2048):
             return counts, e
 
         counts0 = jnp.zeros(q.shape[0], jnp.int32)
-        pcast = getattr(jax.lax, "pcast", None)
-        counts0 = pcast(counts0, axes_t, to="varying") if pcast else jax.lax.pvary(counts0, axes_t)
+        counts0 = compat.pvary(counts0, axes_t)
         counts, _ = jax.lax.fori_loop(0, psize, body, (counts0, q))
         return counts
 
     spec = P(axes_t if len(axes_t) > 1 else axes_t[0])
-    return jax.jit(jax.shard_map(body_fn, mesh=mesh, in_specs=spec, out_specs=spec))
+    return jax.jit(compat.shard_map(body_fn, mesh=mesh, in_specs=spec, out_specs=spec))
 
 
 def run_cell(points, dims, eps, multi_pod, variant, row_block=2048):
