@@ -2,15 +2,19 @@
 
 PYTHON ?= python
 
-.PHONY: install ci test bench-engine bench-smoke quickstart
+.PHONY: install ci test test-8dev bench-engine bench-smoke quickstart
 
 install:
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
-ci: install test bench-smoke
+ci: install test test-8dev bench-smoke
 
 test:
-	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q --durations=15 --budget-seconds 1800
+
+# the whole in-process suite against 8 simulated host devices (CI leg 2)
+test-8dev:
+	PYTHONPATH=src REPRO_TEST_DEVICES=8 $(PYTHON) -m pytest -x -q --durations=15 --budget-seconds 1800
 
 bench-engine:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/bench_engine.py

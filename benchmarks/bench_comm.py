@@ -4,6 +4,13 @@ Measures the ring-pass (ppermute) wall time on 8 host devices in a
 subprocess (BSP supersteps, paper Sec. 6.3) and reports the analytic wire
 model: (|p|-1) * |D| elements total, |D| - |D|/|p| sent per node.
 
+Also benchmarks the **device-fused indexed ring** (DESIGN.md #7 addendum)
+against the host-driven BSP driver on the same 8-device mesh: the
+``fused_ring`` rows record that the fused path compiles to ONE program
+(traces=1) executed ONCE per join (executions_per_join=1, device
+dispatches=1) while the host driver re-enters Python every round
+(dispatches = its chunk-program launches), plus the warm wall time of both.
+
 ``--tiny`` (or BENCH_SMOKE=1) shrinks |D| so `make bench-smoke` can keep
 this path compiling and running in CI-scale time.
 """
@@ -15,7 +22,7 @@ import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import record
+from benchmarks.common import measure_fused_vs_host, record
 from repro.core.distributed import ring_comm_elements
 
 SCRIPT = textwrap.dedent(
@@ -50,6 +57,21 @@ SCRIPT = textwrap.dedent(
 FULL_CELLS = [("Syn16D2M", 40_000, 16), ("SuSy", 40_000, 18)]
 TINY_CELLS = [("Syn16D2M", 2_000, 16), ("SuSy", 2_000, 18)]
 
+def run_fused(tiny: bool = False):
+    """fused_ring rows: one-program-once contract + fused-vs-host wall time.
+
+    The subprocess (``common.measure_fused_vs_host``) asserts count parity
+    and the contract -- traces == 1, device dispatches == 1 per join.
+    """
+    n, dims = (1_500, 16) if tiny else (12_000, 16)
+    for p, fused_us, host_us, host_disp in measure_fused_vs_host(n, dims, [8]):
+        record(
+            f"fused_ring/Syn{dims}D/p={p}", fused_us,
+            f"traces=1;executions_per_join=1;device_dispatches=1;"
+            f"host_dispatches={host_disp};"
+            f"host_us={host_us:.1f};speedup_vs_host={host_us / fused_us:.2f}",
+        )
+
 
 def run(tiny: bool = False):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -77,4 +99,6 @@ if __name__ == "__main__":
         default=os.environ.get("BENCH_SMOKE") == "1",
         help="CI-scale configuration (also via BENCH_SMOKE=1)",
     )
-    run(tiny=ap.parse_args().tiny)
+    tiny = ap.parse_args().tiny
+    run(tiny=tiny)
+    run_fused(tiny=tiny)

@@ -4,6 +4,12 @@ Round-robin assignment of the measured per-batch times (bench_partition_
 balance writes them) to |p| workers; speedup vs |p|=1.  The paper reports
 near-ideal scaling up to 128 -- entity partitioning makes batch costs
 near-equal, so max-load ~ total/|p|.
+
+``run_fused_vs_host`` adds *measured* rows for the distributed engine's two
+drivers (DESIGN.md #7): host-driven BSP loop vs the device-fused ring, on
+|p| in {1, 2, 4, 8} simulated devices -- the per-|p| dispatch overhead the
+fusion removes grows with |p| (the host loop re-enters Python |p| times per
+round x chunk programs; the fused ring is one dispatch regardless of |p|).
 """
 from __future__ import annotations
 
@@ -12,9 +18,22 @@ import os
 
 import numpy as np
 
-from benchmarks.common import record
+from benchmarks.common import measure_fused_vs_host, record
 from repro.core import simulate_scaling
 from benchmarks.bench_partition_balance import OUT as TIMES_FILE, run as _gen
+
+
+def run_fused_vs_host(tiny: bool = False):
+    n, dims = (1_500, 16) if tiny else (8_000, 16)
+    for p, fused_us, host_us, host_disp in measure_fused_vs_host(
+        n, dims, [1, 2, 4, 8]
+    ):
+        record(
+            f"fig11/fused_vs_host/p={p}", fused_us,
+            f"host_us={host_us:.1f};"
+            f"speedup_vs_host={host_us / fused_us:.2f};"
+            f"fused_dispatches=1;host_dispatches={host_disp}",
+        )
 
 
 def run():
@@ -36,3 +55,4 @@ def run():
 
 if __name__ == "__main__":
     run()
+    run_fused_vs_host(tiny=os.environ.get("BENCH_SMOKE") == "1")

@@ -9,10 +9,81 @@ roofline analysis (EXPERIMENTS.md #Roofline).
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import textwrap
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# Shared fused-vs-host measurement for the distributed engine (used by
+# bench_comm's contract row and bench_scaling's per-|p| rows).  Runs in a
+# subprocess: the 8-device flag must precede jax init.
+_FUSED_VS_HOST_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, time
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np
+    import jax
+    from repro.core import DistributedSelfJoinEngine, SelfJoinConfig
+    from repro.data import exponential_dataset
+
+    n, dims = int(sys.argv[2]), int(sys.argv[3])
+    ps = [int(x) for x in sys.argv[4].split(",")]
+    D = exponential_dataset(n, dims, seed=5)
+    cfg = SelfJoinConfig(eps=0.06, k=4, tile_size=16)
+    for p in ps:
+        mesh = jax.make_mesh((p,), ("data",))
+        host_eng = DistributedSelfJoinEngine(D, cfg, mesh=mesh)
+        host_res = host_eng.count()          # warm the chunk programs
+        t0 = time.perf_counter()
+        host_res = host_eng.count()
+        host_us = (time.perf_counter() - t0) * 1e6
+        fused_eng = DistributedSelfJoinEngine(D, cfg, mesh=mesh, fused=True)
+        fused_res = fused_eng.count()        # pack + trace + compile + run
+        assert np.array_equal(fused_res.counts, host_res.counts), p
+        t0 = time.perf_counter()
+        fused_res = fused_eng.count()        # warm: one dispatch, one program
+        fused_us = (time.perf_counter() - t0) * 1e6
+        assert fused_eng.fused_traces == 1, "fused ring retraced"
+        assert fused_res.stats.num_device_dispatches == 1
+        print("ROW", p, fused_us, host_us,
+              host_res.stats.num_device_dispatches, flush=True)
+    """
+)
+
+
+def measure_fused_vs_host(
+    n: int, dims: int, workers: Sequence[int], timeout: int = 1800
+) -> List[Tuple[int, float, float, int]]:
+    """Warm fused vs host-driven join times on |p|-device meshes.
+
+    Returns ``[(p, fused_us, host_us, host_dispatches)]``; the subprocess
+    asserts count parity and the fused one-trace / one-dispatch contract.
+    """
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [
+            sys.executable, "-c", _FUSED_VS_HOST_SCRIPT, src,
+            str(n), str(dims), ",".join(str(p) for p in workers),
+        ],
+        capture_output=True, text=True, timeout=timeout,
+        env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"fused-vs-host subprocess failed:\n{out.stderr[-2000:]}"
+        )
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("ROW "):
+            _, p, fused_us, host_us, host_disp = line.split()
+            rows.append((int(p), float(fused_us), float(host_us), int(host_disp)))
+    return rows
 
 
 def record(name: str, us_per_call: float, derived: str = ""):

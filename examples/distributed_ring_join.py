@@ -4,13 +4,16 @@ before jax initializes):
 
     PYTHONPATH=src python examples/distributed_ring_join.py
 
-Two layers are exercised:
+Three layers are exercised:
 
   * the grid-indexed ``DistributedSelfJoinEngine`` (DESIGN.md #7): per-shard
     grid index + per-round bipartite tile join, so the ring path keeps the
     paper's candidate filtering (num_candidates << |D|^2);
+  * its device-fused form (``fused=True``, DESIGN.md #7a): the same BSP
+    schedule as ONE compiled ``shard_map`` program -- padded tile tables
+    rotate as ``ppermute`` payloads inside a ``fori_loop``;
   * the ``shard_map``/``ppermute`` wire protocol of ``ring_self_join_counts``
-    -- the transport the engine's tile tables ride on real hardware.
+    -- the dense transport reference.
 """
 import os
 
@@ -41,6 +44,16 @@ print(f"candidates evaluated: {s.num_candidates} "
       f"(dense ring would do {s.num_candidates_dense}; "
       f"filter ratio {s.candidate_filter_ratio:.3f})")
 print(f"elements communicated: {s.comm_elements} (= (|p|-1)|D|, paper Sec. 6.3)")
+
+# device-fused ring: identical counts from one compiled program
+fused_engine = DistributedSelfJoinEngine(
+    D, SelfJoinConfig(eps=eps, k=4), mesh=mesh, assignment="dynamic", fused=True
+)
+fused = fused_engine.count()
+assert np.array_equal(res.counts, fused.counts)
+print(f"fused ring: {fused_engine.fused_traces} trace, "
+      f"{fused.stats.num_device_dispatches} device dispatch "
+      f"(host-driven loop: {s.num_device_dispatches} dispatches)")
 
 # wire-protocol reference: dense shard_map ring, same counts
 counts_wire = ring_self_join_counts(D, eps, mesh, "data")

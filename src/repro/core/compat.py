@@ -33,9 +33,26 @@ def resolve_shard_map():
     return sm_experimental
 
 
-def shard_map(f, *, mesh, in_specs, out_specs):
-    """``jax.shard_map`` with the ``jax.experimental`` fallback applied."""
-    return resolve_shard_map()(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=True):
+    """``jax.shard_map`` with the ``jax.experimental`` fallback applied.
+
+    ``check_rep=False`` disables replication/varying-axes checking -- needed
+    when the sharded body contains a ``pallas_call`` (no replication rule
+    exists for it).  The flag's spelling moved across releases
+    (``check_rep`` -> ``check_vma``), so both are tried; on versions with
+    neither the plain call is returned (those predate the checker).
+    """
+    sm = resolve_shard_map()
+    if not check_rep:
+        for kw in ("check_vma", "check_rep"):
+            try:
+                return sm(
+                    f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    **{kw: False},
+                )
+            except TypeError:
+                continue
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def axis_size(axes):
@@ -53,6 +70,19 @@ def axis_size(axes):
             size *= size_fn(a)
         return size
     return int(jax.lax.psum(1, axes_t))
+
+
+def ppermute(x, axes, perm):
+    """``jax.lax.ppermute`` over one or more mesh axes.
+
+    Normalizes the axis-name spelling (a single name for 1-axis rings, the
+    tuple for joint rings such as ``("pod", "data")``) so callers can pass
+    either form; ``perm`` is the usual source->destination pair list over
+    the flattened ring positions.
+    """
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    name = axes_t if len(axes_t) > 1 else axes_t[0]
+    return jax.lax.ppermute(x, name, perm)
 
 
 def pvary(x, axes):

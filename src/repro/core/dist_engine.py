@@ -28,23 +28,41 @@ index evaluated) and ``num_candidates_dense`` (the |Q| x |E| volume the dense
 ring pays): their ratio is the distributed filtering power.
 
 Execution model: index construction is host-side (as in the paper) and the
-per-round tile evaluation is device code; this class drives the BSP schedule
-from the host, so it runs identically on 1 or 8 simulated devices.  The
-wire-protocol realization of the rotation (``shard_map`` + ``ppermute``)
-lives in ``core/distributed.py`` and ``launch/selfjoin_dryrun.py``; on real
-hardware the tile tables built here are exactly the payloads those ppermute
-rounds carry.  Unequal shards from a non-divisible |D| need no sentinel
-padding here -- shard tile tables are per-shard anyway.
+per-round tile evaluation is device code.  Two drivers share that contract:
+
+  * the **host-driven** BSP loop (default): the schedule re-enters Python
+    between rounds, so it runs identically on 1 or 8 simulated devices and
+    serves as the differential oracle for
+  * the **device-fused** ring (``fused=True``): the per-(worker, round)
+    query tile tables and pair lists are packed host-side into uniform
+    (fleet-max-padded, sentinel-masked) arrays, the dataset shards' tile
+    tables become the ``ppermute`` ring payload of
+    ``core.distributed.ring_scan``, and the |p| rounds run as a
+    ``fori_loop`` inside ONE compiled ``shard_map`` program -- each round
+    evaluated through the same chunked count step as
+    ``SelfJoinEngine.count_query`` (``engine.count_chunk_step``).  One
+    trace, one dispatch per join; eps stays a traced scalar so an eps sweep
+    re-executes the same program.
+
+Unequal shards from a non-divisible |D| need no sentinel padding on the
+host-driven path (shard tile tables are per-shard anyway); the fused path
+pads every table to the fleet-wide maximum -- padded tiles carry length 0,
+padded pair-list entries sit past the per-chunk ``real`` prefix, and padded
+query slots scatter to an out-of-range sentinel dropped by ``mode="drop"``.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.distributed import ring_comm_elements
-from repro.core.engine import SelfJoinEngine
-from repro.core.grid import adjacent_cell_pairs, build_grid
+from repro.core import compat
+from repro.core.distributed import ring_comm_elements, ring_scan
+from repro.core.engine import SelfJoinEngine, count_chunk_step
+from repro.core.grid import adjacent_cell_pairs, build_grid, pad_axis0
 from repro.core.partition import EntityPartition, assign_dynamic, make_partition
 from repro.core.reorder import variance_reorder
 from repro.core.types import (
@@ -53,6 +71,7 @@ from repro.core.types import (
     SelfJoinResult,
     SelfJoinStats,
 )
+from repro.kernels import ops
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -77,6 +96,12 @@ class DistributedSelfJoinEngine:
     assignment; ``assignment="dynamic"`` runs the sampling-style cost
     estimate (adjacent-cell candidate volume per batch) through the greedy
     LPT scheduler for straggler mitigation (paper Sec. 6.2).
+
+    ``fused=True`` (requires a mesh whose ring size equals ``num_workers``)
+    compiles the whole BSP schedule into one ``shard_map`` program --
+    ``count()`` then costs exactly one device dispatch and an eps sweep
+    re-executes the same executable (see module docstring / DESIGN.md #7a).
+    The default host-driven loop is its differential oracle.
     """
 
     def __init__(
@@ -90,6 +115,7 @@ class DistributedSelfJoinEngine:
         num_batches: Optional[int] = None,
         assignment: str = "round_robin",
         engine_config: Optional[EngineConfig] = None,
+        fused: bool = False,
     ):
         if num_workers is None:
             if mesh is None:
@@ -99,6 +125,14 @@ class DistributedSelfJoinEngine:
             raise ValueError("num_workers must be >= 1")
         if assignment not in ("round_robin", "dynamic"):
             raise ValueError(f"unknown assignment {assignment!r}")
+        if fused:
+            if mesh is None:
+                raise ValueError("fused=True needs a mesh (one ring position per device)")
+            if num_workers != _mesh_workers(mesh, axes):
+                raise ValueError(
+                    "fused=True requires num_workers == mesh ring size "
+                    f"({num_workers} != {_mesh_workers(mesh, axes)})"
+                )
 
         self.config = config
         self.engine_config = engine_config
@@ -132,6 +166,12 @@ class DistributedSelfJoinEngine:
                 self.estimate_batch_costs(), self.num_workers
             )
         self.assignment = assignment
+
+        # fused-ring state (built lazily on the first fused count)
+        self.fused = bool(fused)
+        self._fused_pack = None       # packed tables + compiled program
+        self.fused_traces = 0         # times the fused program was traced
+        self.fused_executions = 0     # times it was executed
 
     # -- partitioning -----------------------------------------------------
 
@@ -197,6 +237,191 @@ class DistributedSelfJoinEngine:
         """Ring transport volume in points: (|p| - 1) |D| (paper Sec. 6.3)."""
         return ring_comm_elements(self.num_points, self.num_workers)
 
+    # -- fused device ring (DESIGN.md #7 addendum) -------------------------
+
+    def _pack_fused(self, eps: float):
+        """Pack the fused ring's device tables and compile its program.
+
+        Everything host-side happens here, once per index radius: the |p|^2
+        bipartite query plans (worker k's batches binned into shard j's
+        grid, j = (k - r) mod |p| for round r), padded to fleet-wide maxima
+        so one trace fits every ring position, plus the padded shard tile
+        tables that form the rotating payload.  eps is NOT baked in -- the
+        program takes it as a traced scalar, so a sweep at or below the
+        packed radius reuses both the pack and the compiled executable.
+        """
+        p = self.num_workers
+        cfg = self.config
+        eng = self.engine_config or EngineConfig()
+        t = cfg.tile_size
+        n_pad = self.shards[0].n_pad
+
+        q_index = [self.worker_query_index(k) for k in range(p)]
+        q_pts = [self._pts[idx] for idx in q_index]
+        nq = [int(idx.size) for idx in q_index]
+        max_nq = max(max(nq), 1)
+
+        # |p|^2 host-side bipartite plans: worker k meets shard (k - r) % p
+        # in round r (None where either side is empty -> fully masked round)
+        qplans = [
+            [self.shards[(k - r) % p].build_query_plan(q_pts[k], eps)
+             if nq[k] else None
+             for r in range(p)]
+            for k in range(p)
+        ]
+        flat = [qp for row in qplans for qp in row if qp is not None]
+        max_qt = max(max((qp.num_q_tiles for qp in flat), default=0), 1)
+        max_dt = max(max((e.plan.num_tiles if e.plan else 0 for e in self.shards), default=0), 1)
+        max_pr = max((qp.num_pairs for qp in flat), default=0)
+        chunk = max(1, min(eng.count_chunk, max(max_pr, 1)))
+        n_chunks = max(-(-max_pr // chunk), 1)
+
+        qt = np.zeros((p, p, max_qt, t, n_pad), np.float32)
+        qstart = np.zeros((p, p, max_qt), np.int32)
+        qlen = np.zeros((p, p, max_qt), np.int32)
+        qord = np.full((p, p, max_nq), max_nq, np.int32)   # sentinel: dropped
+        pq = np.zeros((p, p, n_chunks, chunk), np.int32)
+        pd = np.zeros((p, p, n_chunks, chunk), np.int32)
+        real = np.zeros((p, p, n_chunks), np.int32)
+        dt = np.zeros((p, max_dt, t, n_pad), np.float32)
+        dlen = np.zeros((p, max_dt), np.int32)
+
+        for j, e in enumerate(self.shards):
+            dt[j], dlen[j] = e.packed_tile_table(max_dt)
+
+        stats_pairs_total = stats_pairs_eval = stats_candidates = 0
+        for k in range(p):
+            for r in range(p):
+                qp = qplans[k][r]
+                if qp is None:
+                    continue
+                stats_pairs_total += qp.num_tile_pairs_total
+                stats_pairs_eval += qp.num_pairs
+                stats_candidates += qp.num_candidates
+                if qp.num_q_tiles:
+                    tiles_kr, len_kr = ops.make_tiles(
+                        qp.q_sorted, qp.q_tile_start, qp.q_tile_len, t, cfg.dim_block
+                    )
+                    qt[k, r, : tiles_kr.shape[0]] = tiles_kr
+                    qlen[k, r] = pad_axis0(len_kr, max_qt)
+                    qstart[k, r] = pad_axis0(qp.q_tile_start, max_qt)
+                qord[k, r, : nq[k]] = qp.q_order.astype(np.int32)
+                if qp.num_pairs:
+                    pq[k, r].reshape(-1)[: qp.num_pairs] = qp.pair_q
+                    # B side indexes the concatenated [query | shard] table
+                    pd[k, r].reshape(-1)[: qp.num_pairs] = qp.pair_d + max_qt
+                    real[k, r] = np.clip(
+                        qp.num_pairs - np.arange(n_chunks) * chunk, 0, chunk
+                    ).astype(np.int32)
+
+        axes_t = (self.axes,) if isinstance(self.axes, str) else tuple(self.axes)
+        ax = axes_t if len(axes_t) > 1 else axes_t[0]
+        backend = "pallas" if cfg.use_pallas else "jnp"
+        interpret = eng.interpret
+        engine_self = self
+
+        def local(qt, qstart, qlen, qord, pq, pd, real, dt, dlen, eps_in):
+            engine_self.fused_traces += 1  # traced once; executions replay it
+            qt, qstart, qlen, qord = qt[0], qstart[0], qlen[0], qord[0]
+            pq, pd, real = pq[0], pd[0], real[0]
+            dt, dlen = dt[0], dlen[0]
+
+            def round_body(r, counts_local, payload):
+                d_tiles, d_len = payload
+                tiles = jnp.concatenate([qt[r], d_tiles], axis=0)
+                tlen = jnp.concatenate([qlen[r], d_len])
+                # B-side starts are never read (only pair_a rows scatter)
+                tstart = jnp.concatenate([qstart[r], jnp.zeros_like(d_len)])
+
+                def chunk_body(c, counts_sorted):
+                    counts_sorted, _ = count_chunk_step(
+                        counts_sorted, jnp.zeros((), jnp.int32),
+                        tiles, tlen, tstart,
+                        pq[r, c], pd[r, c], real[r, c], eps_in,
+                        dim_block=cfg.dim_block, shortc=cfg.shortc,
+                        backend=backend, interpret=interpret,
+                    )
+                    return counts_sorted
+
+                counts_sorted = jax.lax.fori_loop(
+                    0, n_chunks, chunk_body, jnp.zeros(max_nq, jnp.int32)
+                )
+                # per-round q_order: q-sorted position -> worker-local slot
+                return counts_local.at[qord[r]].add(counts_sorted, mode="drop")
+
+            counts0 = compat.pvary(jnp.zeros(max_nq, jnp.int32), axes_t)
+            counts = ring_scan(axes_t, round_body, counts0, (dt, dlen))
+            return counts[None]
+
+        def pspec(arr):
+            return P(ax, *([None] * (arr.ndim - 1)))
+
+        # tables go device-resident (with their ring sharding) at pack time:
+        # repeat joins and eps sweeps then transfer only the eps scalar
+        args = tuple(
+            jax.device_put(a, NamedSharding(self.mesh, pspec(a)))
+            for a in (qt, qstart, qlen, qord, pq, pd, real, dt, dlen)
+        )
+        fn = jax.jit(
+            compat.shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=tuple(pspec(a) for a in args) + (P(),),
+                out_specs=P(ax, None),
+                # pallas_call has no replication rule; the program's outputs
+                # are device-varying by construction, so the check adds
+                # nothing here
+                check_rep=not cfg.use_pallas,
+            )
+        )
+        self._fused_pack = dict(
+            eps=float(eps), fn=fn, args=args,
+            q_index=q_index, nq=nq, n_chunks=n_chunks,
+            stats=(stats_pairs_total, stats_pairs_eval, stats_candidates),
+        )
+        return self._fused_pack
+
+    def _count_fused(self, eps: float) -> SelfJoinResult:
+        """One-dispatch fused ring count (counts == host-driven ``count()``)."""
+        pack = self._fused_pack
+        if pack is None or eps > pack["eps"]:
+            pack = self._pack_fused(max(eps, self.config.eps))
+        out = np.asarray(
+            jax.device_get(pack["fn"](*pack["args"], jnp.float32(eps)))
+        )
+        self.fused_executions += 1
+        counts = np.zeros(self.num_points, dtype=np.int64)
+        for k in range(self.num_workers):
+            counts[pack["q_index"][k]] = out[k, : pack["nq"][k]]
+        pairs_total, pairs_eval, candidates = pack["stats"]
+        shard_sizes = np.diff(self.shard_bounds)
+        stats = SelfJoinStats(
+            num_points=self.num_points,
+            num_dims=self.num_dims,
+            k=min(self.config.k, self.num_dims),
+            num_workers=self.num_workers,
+            num_rounds=self.num_workers,
+            comm_elements=self.comm_elements(),
+            num_tile_pairs_total=pairs_total,
+            num_tile_pairs_evaluated=pairs_eval,
+            num_candidates=candidates,
+            num_chunks=self.num_workers * pack["n_chunks"],
+            num_device_dispatches=1,
+            num_candidates_dense=int(
+                sum(
+                    pack["nq"][k] * shard_sizes[j]
+                    for r, sched in enumerate(self.ring_schedule())
+                    for k, j in sched
+                )
+            ),
+            num_results=int(counts.sum()),
+        )
+        stats.num_tiles = sum(e.plan.num_tiles for e in self.shards if e.plan)
+        stats.num_nonempty_cells = sum(
+            e.grid.num_cells for e in self.shards if e.grid
+        )
+        return SelfJoinResult(counts=counts, stats=stats)
+
     # -- queries ----------------------------------------------------------
 
     def count(self, eps: Optional[float] = None) -> SelfJoinResult:
@@ -208,8 +433,14 @@ class DistributedSelfJoinEngine:
         accumulate across rounds; after |p| rounds each query point has met
         every shard exactly once, so the result equals the single-device
         ``SelfJoinEngine.count()`` and the brute-force oracle.
+
+        With ``fused=True`` the same schedule runs as one compiled
+        ``shard_map`` program (``_count_fused``); this host-driven loop is
+        its differential oracle.
         """
         eps = self.config.eps if eps is None else float(eps)
+        if self.fused and self.num_points:
+            return self._count_fused(eps)
         counts = np.zeros(self.num_points, dtype=np.int64)
         stats = SelfJoinStats(
             num_points=self.num_points,
@@ -232,6 +463,7 @@ class DistributedSelfJoinEngine:
                 stats.num_tile_pairs_evaluated += s.num_tile_pairs_evaluated
                 stats.num_candidates += s.num_candidates
                 stats.num_chunks += s.num_chunks
+                stats.num_device_dispatches += s.num_chunks
                 stats.dim_blocks_skipped += s.dim_blocks_skipped
                 stats.dim_blocks_total += s.dim_blocks_total
                 stats.num_candidates_dense += int(q_index[k].size * shard_sizes[j])

@@ -14,14 +14,21 @@ exactly |D|/|p| points, totalling (|p|-1)|D| elements as derived in the paper.
 Compute of round i overlaps the permute of round i+1 on real hardware (XLA
 schedules the independent ops concurrently).
 
-This module is the **wire-protocol reference**: its local join is a dense
-blocked distance count, which evaluates every (Q_k, E_j) point pair and
-therefore discards the grid index's candidate filtering -- the paper's
-per-worker design keeps the full indexed join on every processing element.
-The production path is ``core/dist_engine.py`` (DESIGN.md #7), which runs
-each ring round through the per-shard grid index; keep this dense ring for
-transport measurement (`benchmarks/bench_comm.py`) and as the end-to-end
-``shard_map`` correctness oracle.
+This module owns the **ring transport**: ``ring_scan`` runs the |p| BSP
+supersteps as a ``fori_loop`` whose body consumes an arbitrary *pytree*
+payload and whose epilogue ``ppermute``-rotates that payload to the next
+ring position.  Two payload flavours ride on it:
+
+  * the dense reference below (``make_ring_counts_fn``): the payload is the
+    raw point block and the local join is a blocked brute-force count --
+    it evaluates every (Q_k, E_j) point pair, discarding the grid index's
+    candidate filtering, and is kept for transport measurement
+    (`benchmarks/bench_comm.py`) and as the end-to-end ``shard_map``
+    correctness oracle;
+  * the production path (``core/dist_engine.py`` with ``fused=True``,
+    DESIGN.md #7): the payload is the shard's padded *tile table*
+    (tiles, tile lengths) and the body is the chunked indexed count
+    program -- the whole join is one compiled device program.
 
 Works unchanged on a 1-axis mesh ("data") or the joint ("pod","data") axes of
 the production mesh -- the ring simply spans both (inter-pod DCI hops occur
@@ -67,6 +74,46 @@ def _ring_perm(size: int) -> Sequence[Tuple[int, int]]:
     return [(j, (j + 1) % size) for j in range(size)]
 
 
+def ring_scan(axes, body, carry, payload, *, num_rounds=None, overlap=False):
+    """Generic BSP ring inside a ``shard_map``'d function.
+
+    Runs ``num_rounds`` (default: the ring size) supersteps of
+
+        carry = body(round, carry, payload)
+
+    rotating ``payload`` -- any pytree of arrays -- one ring position
+    forward (``ppermute`` to ``(j + 1) mod |p|``) between rounds.  With
+    ``overlap=True`` the permute of round r+1 is *issued before* round r's
+    body (the paper's Fig. 4 pipeline: transport overlaps compute; XLA
+    schedules the independent ops concurrently on real hardware).
+
+    The carry must already be device-varying over ``axes`` where vma
+    tracking applies -- ``compat.pvary`` it before calling.
+    """
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    psize = compat.axis_size(axes_t)
+    perm = _ring_perm(psize)
+    rotate = functools.partial(
+        jax.tree_util.tree_map,
+        lambda x: compat.ppermute(x, axes_t, perm),
+    )
+
+    def step(r, state):
+        carry, pl = state
+        if overlap:
+            pl_next = rotate(pl)
+            carry = body(r, carry, pl)
+            pl = pl_next
+        else:
+            carry = body(r, carry, pl)
+            pl = rotate(pl)
+        return carry, pl
+
+    n = psize if num_rounds is None else num_rounds
+    carry, _ = jax.lax.fori_loop(0, n, step, (carry, payload))
+    return carry
+
+
 def make_ring_counts_fn(mesh: Mesh, axes: AxisNames, eps: float, row_block: int = 1024):
     """Build the shard_map'd ring-join counts program for ``mesh``.
 
@@ -77,22 +124,16 @@ def make_ring_counts_fn(mesh: Mesh, axes: AxisNames, eps: float, row_block: int 
     eps2 = float(eps) ** 2
 
     def local(d_block):
-        psize = compat.axis_size(axes_t)
         q = d_block
-        perm = _ring_perm(psize)
 
-        def body(_, carry):
-            counts, e = carry
-            counts = counts + _local_counts(q, e, eps2, row_block)
-            e = jax.lax.ppermute(e, axes_t if len(axes_t) > 1 else axes_t[0], perm)
-            return counts, e
+        def body(_, counts, e):
+            return counts + _local_counts(q, e, eps2, row_block)
 
         counts0 = jnp.zeros(q.shape[0], jnp.int32)
         # the carry must be device-varying over the mesh axes on shard_map
         # versions with vma tracking; a no-op on versions without (compat)
         counts0 = compat.pvary(counts0, axes_t)
-        counts, _ = jax.lax.fori_loop(0, psize, body, (counts0, q))
-        return counts
+        return ring_scan(axes_t, body, counts0, q)
 
     spec = P(axes_t if len(axes_t) > 1 else axes_t[0])
     return jax.jit(

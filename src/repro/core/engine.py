@@ -74,10 +74,7 @@ def _chunk_validity(tile_len, tile_start, pa, real, t):
     return pair_valid, valid, idx
 
 
-@functools.partial(
-    jax.jit, static_argnames=("dim_block", "shortc", "backend", "interpret")
-)
-def _count_chunk_program(
+def count_chunk_step(
     counts_sorted,  # (N,) int32 running per-point counts, grid-sorted
     skipped_tot,    # ()  int32 running SHORTC skipped-block total
     tiles,          # (num_tiles, T, n_pad) f32
@@ -89,7 +86,13 @@ def _count_chunk_program(
     *,
     dim_block, shortc, backend, interpret,
 ):
-    """One counts-mode chunk: evaluate + scatter-add, fully on device."""
+    """One counts-mode chunk: evaluate + scatter-add, fully traceable.
+
+    This is the body shared by the jitted single-device program below and
+    the fused distributed ring program (``core/dist_engine.py``), where the
+    tile tables themselves are traced values rotating through ``ppermute``
+    -- so nothing here may assume host-side (concrete) inputs.
+    """
     counts, skipped = ops.eval_tile_pairs(
         tiles, tile_len, pa, pb, eps,
         dim_block=dim_block, shortc=shortc, backend=backend,
@@ -104,6 +107,11 @@ def _count_chunk_program(
     )
     skipped_tot = skipped_tot + jnp.where(pair_valid, skipped, 0).sum()
     return counts_sorted, skipped_tot
+
+
+_count_chunk_program = functools.partial(
+    jax.jit, static_argnames=("dim_block", "shortc", "backend", "interpret")
+)(count_chunk_step)
 
 
 @functools.partial(
@@ -284,6 +292,55 @@ class SelfJoinEngine:
     def _num_dim_blocks(self) -> int:
         return self._tiles.shape[2] // self.config.dim_block
 
+    @property
+    def n_pad(self) -> int:
+        """Padded dimension count of the tile layout (n -> dim_block multiple)."""
+        db = self.config.dim_block
+        return ((self.num_dims + db - 1) // db) * db
+
+    def build_query_plan(self, q_pts: np.ndarray, eps: Optional[float] = None):
+        """Bipartite Q-tile x D-tile plan for ``q_pts`` against this index.
+
+        ``q_pts`` is in ORIGINAL coordinates; the engine applies its own
+        REORDER permutation.  Shared by ``count_query`` and the fused
+        distributed ring packer (``core/dist_engine.py``), which needs the
+        plan host-side to pad it into the uniform per-round tables.
+        Returns ``None`` when the engine indexes no points (every candidate
+        list would be empty).
+        """
+        if self.num_points == 0:
+            return None
+        eps = self.config.eps if eps is None else float(eps)
+        self._ensure_index(eps)
+        q_work = q_pts[:, self._perm] if self._perm is not None else q_pts
+        return build_query_tile_plan(
+            self.grid, self.plan, q_work, self.config.sortidu
+        )
+
+    def packed_tile_table(self, num_tiles: int):
+        """Host-side ``(tiles, tile_len)`` padded to ``num_tiles`` rows.
+
+        The fused ring payload: every shard's tile table is padded to the
+        fleet-wide maximum so all ring positions trace with one shape;
+        padding rows carry ``tile_len == 0`` (the sentinel the chunk
+        program's validity mask already understands), so they contribute
+        nothing wherever a padded pair list references them.
+        """
+        t = self.config.tile_size
+        tiles = np.zeros((num_tiles, t, self.n_pad), np.float32)
+        tile_len = np.zeros(num_tiles, np.int32)
+        if self.plan is not None and self.plan.num_tiles:
+            real, lens = ops.make_tiles(
+                self.grid.pts_sorted,
+                self.plan.tile_start,
+                self.plan.tile_len,
+                t,
+                self.config.dim_block,
+            )
+            tiles[: real.shape[0]] = real
+            tile_len[: lens.shape[0]] = lens
+        return tiles, tile_len
+
     # -- queries ----------------------------------------------------------
 
     def count(self, eps: Optional[float] = None) -> SelfJoinResult:
@@ -337,9 +394,7 @@ class SelfJoinEngine:
             return SelfJoinResult(
                 counts=np.zeros(nq, np.int64), stats=self._base_stats(eps)
             )
-        self._ensure_index(eps)
-        q_work = q_pts[:, self._perm] if self._perm is not None else q_pts
-        qplan = build_query_tile_plan(self.grid, self.plan, q_work, cfg.sortidu)
+        qplan = self.build_query_plan(q_pts, eps)
 
         stats = self._base_stats(eps)
         stats.num_points = nq

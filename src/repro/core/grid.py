@@ -166,6 +166,21 @@ def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
     )
 
 
+def pad_axis0(a: np.ndarray, target: int, fill=0) -> np.ndarray:
+    """Pad ``a`` along axis 0 to ``target`` rows with the sentinel ``fill``.
+
+    The uniform-shape contract of the fused distributed ring (DESIGN.md #7):
+    every per-(worker, round) tile table and pair list is padded to the
+    fleet-wide maximum so a single trace fits all ring positions.  ``fill``
+    is 0 for tile lengths (the chunk program's validity mask drops empty
+    tiles) and an out-of-range index for scatter maps (``mode="drop"``).
+    """
+    if a.shape[0] >= target:
+        return a
+    pad = np.full((target - a.shape[0],) + a.shape[1:], fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
 def _neighbor_offsets(k: int) -> np.ndarray:
     """The (3^k, k) array of {-1, 0, 1} cell-coordinate offsets (Fig. 1)."""
     return np.stack(

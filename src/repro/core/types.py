@@ -85,6 +85,8 @@ class SelfJoinStats:
     overflow_retries: int = 0            # auto-grow retries in pairs mode (engine)
     num_workers: int = 0                 # |p| (distributed engine)
     num_rounds: int = 0                  # ring rounds executed (= |p|)
+    num_device_dispatches: int = 0       # host->device chunk-program launches
+                                         # per join (fused ring: exactly 1)
     num_candidates_dense: int = 0        # |Q| x |E| sum a dense ring pass would do
     comm_elements: int = 0               # ring transport volume, (|p|-1)|D| points
 

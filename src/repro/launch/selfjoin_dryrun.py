@@ -25,6 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core import compat  # noqa: E402
+from repro.core.distributed import ring_scan  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_desc  # noqa: E402
 from repro.roofline import roofline_terms  # noqa: E402
 
@@ -51,26 +52,17 @@ def ring_fn(mesh, axes, eps, *, variant="base", row_block=2048):
         return jax.lax.map(one, blocks).reshape(-1)
 
     def body_fn(d_block):
-        psize = compat.axis_size(axes_t)
-        perm = [(j, (j + 1) % psize) for j in range(psize)]
         q = d_block
-        ax = axes_t if len(axes_t) > 1 else axes_t[0]
 
-        def body(_, carry):
-            counts, e = carry
-            if variant == "overlap":
-                e_next = jax.lax.ppermute(e, ax, perm)   # issued first: overlaps
-                counts = counts + local_counts(q, e)
-                e = e_next
-            else:
-                counts = counts + local_counts(q, e)
-                e = jax.lax.ppermute(e, ax, perm)
-            return counts, e
+        def body(_, counts, e):
+            return counts + local_counts(q, e)
 
-        counts0 = jnp.zeros(q.shape[0], jnp.int32)
-        counts0 = compat.pvary(counts0, axes_t)
-        counts, _ = jax.lax.fori_loop(0, psize, body, (counts0, q))
-        return counts
+        counts0 = compat.pvary(jnp.zeros(q.shape[0], jnp.int32), axes_t)
+        # overlap variant: ring_scan issues round r+1's permute before round
+        # r's body -- paper Fig. 4's pipeline, at ring scale
+        return ring_scan(
+            axes_t, body, counts0, q, overlap=(variant == "overlap")
+        )
 
     spec = P(axes_t if len(axes_t) > 1 else axes_t[0])
     return jax.jit(compat.shard_map(body_fn, mesh=mesh, in_specs=spec, out_specs=spec))

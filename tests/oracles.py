@@ -1,0 +1,84 @@
+"""Shared test-oracle layer (one copy, replacing per-file duplicates).
+
+The canonical brute-force oracles live in ``repro.core.brute`` (they are
+library code the benchmarks use too); this module adds what only tests
+need -- the bipartite oracle, the pair-set normalizer, and one
+parameterized dataset generator whose cases cover the regimes every tier
+of the join must survive:
+
+  * uniform / exponential / clustered point distributions,
+  * duplicated points (counts > 1 at eps == 0),
+  * degenerate constant dimensions (zero-variance axes; REORDER must not
+    divide by zero, the grid must not collapse),
+  * non-divisible |D| (uneven shards / tail tiles everywhere).
+
+Coordinates are 1/64-quantized so fp32 matmul-form distances are exact in
+every formulation (DESIGN.md #6) -- tests compare counts with ``==``, never
+with tolerances.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.brute import brute_counts, brute_pairs  # noqa: F401  (re-export)
+from repro.data import clustered_dataset, exponential_dataset, uniform_dataset
+
+
+def quantize(pts: np.ndarray, steps: int = 64) -> np.ndarray:
+    """Snap coordinates to a 1/steps lattice (exact fp32 distance sums)."""
+    return (np.round(np.asarray(pts, np.float64) * steps) / steps).astype(
+        np.float32
+    )
+
+
+def bipartite_counts(q: np.ndarray, d: np.ndarray, eps: float) -> np.ndarray:
+    """Per-query counts of d-points within eps, float64 ground truth."""
+    q64 = np.asarray(q, np.float64)
+    d64 = np.asarray(d, np.float64)
+    eps2 = np.float64(eps) ** 2
+    counts = np.zeros(q64.shape[0], dtype=np.int64)
+    for i0 in range(0, q64.shape[0], 512):
+        a = q64[i0 : i0 + 512]
+        d2 = ((a[:, None, :] - d64[None, :, :]) ** 2).sum(-1)
+        counts[i0 : i0 + 512] = (d2 <= eps2).sum(1)
+    return counts
+
+
+def pair_set(pairs) -> set:
+    """Order-insensitive comparison form of an (R, 2) pair array."""
+    return set(map(tuple, np.asarray(pairs).tolist()))
+
+
+def make_dataset(kind: str, n: int, dims: int, seed: int = 0) -> np.ndarray:
+    """One generator for every distribution the test matrix exercises."""
+    if kind == "uniform":
+        return quantize(uniform_dataset(n, dims, seed=seed))
+    if kind == "exponential":
+        return quantize(exponential_dataset(n, dims, seed=seed))
+    if kind == "clustered":
+        return quantize(clustered_dataset(n, dims, cluster_std=0.05, seed=seed))
+    if kind == "duplicated":
+        # ~n points built by tiling a base set: duplicate groups of 3 plus a
+        # partial group, so multiplicities differ across points
+        base = quantize(uniform_dataset(max(n // 3, 1), dims, seed=seed))
+        d = np.concatenate([base, base, base, base[: max(n - 3 * len(base), 0)]])
+        return d[:n] if len(d) >= n else d
+    if kind == "constant_dims":
+        # first half of the dimensions are exactly constant (zero variance)
+        d = quantize(uniform_dataset(n, dims, seed=seed))
+        d[:, : max(dims // 2, 1)] = 0.5
+        return d
+    raise ValueError(f"unknown dataset kind {kind!r}")
+
+
+# The shared correctness matrix: (name, data, eps).  Sizes are non-divisible
+# by common worker/tile counts on purpose.
+DATASET_CASES = [
+    ("exp16", make_dataset("exponential", 501, 16, seed=21), 0.06),
+    ("clustered32", make_dataset("clustered", 403, 32, seed=22), 0.25),
+    ("uniform8", make_dataset("uniform", 397, 8, seed=23), 0.3),
+    ("duplicated6", make_dataset("duplicated", 151, 6, seed=24), 0.1),
+    ("constantdims8", make_dataset("constant_dims", 205, 8, seed=25), 0.2),
+]
+
+DATASET_IDS = [c[0] for c in DATASET_CASES]

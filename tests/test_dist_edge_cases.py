@@ -1,0 +1,84 @@
+"""Distributed-tier edge cases (DESIGN.md #7), both assignment modes.
+
+Degenerate inputs the BSP machinery must survive without special-casing by
+the caller: eps == 0 (duplicate join), a single point spread over many
+workers, k exceeding the dimensionality, workers that own zero query
+batches, and the empty dataset.  Plus the pairs-buffer overflow-retry
+regression: after auto-grow the reported counts and |R| are exact.
+"""
+import numpy as np
+import pytest
+
+from oracles import brute_counts, brute_pairs, make_dataset, pair_set
+from repro.core import (
+    DistributedSelfJoinEngine,
+    SelfJoinConfig,
+    SelfJoinEngine,
+)
+from repro.core import batching as batching_mod
+
+MODES = ["round_robin", "dynamic"]
+
+
+@pytest.mark.parametrize("assignment", MODES)
+def test_dist_eps_zero_duplicate_join(assignment):
+    d = make_dataset("duplicated", 90, 6, seed=1)
+    cfg = SelfJoinConfig(eps=0.0, k=3, tile_size=8, dim_block=8)
+    de = DistributedSelfJoinEngine(d, cfg, num_workers=4, assignment=assignment)
+    res = de.count()
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.0))
+    assert (res.counts >= 1).all()          # self-match survives eps == 0
+    assert res.counts.max() >= 3            # and so do the duplicate groups
+
+
+@pytest.mark.parametrize("assignment", MODES)
+def test_dist_single_point_many_workers(assignment):
+    d = make_dataset("uniform", 1, 5, seed=2)
+    cfg = SelfJoinConfig(eps=0.1, k=3)
+    de = DistributedSelfJoinEngine(d, cfg, num_workers=8, assignment=assignment)
+    res = de.count()
+    assert res.counts.tolist() == [1]
+    assert res.stats.num_rounds == 8
+
+
+@pytest.mark.parametrize("assignment", MODES)
+def test_dist_k_exceeds_num_dims(assignment):
+    d = make_dataset("uniform", 120, 3, seed=3)
+    cfg = SelfJoinConfig(eps=0.2, k=7, tile_size=8)   # k > n: clamps to n
+    de = DistributedSelfJoinEngine(d, cfg, num_workers=4, assignment=assignment)
+    res = de.count()
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.2))
+    assert res.stats.k == 3
+
+
+@pytest.mark.parametrize("assignment", MODES)
+def test_dist_empty_query_batches(assignment):
+    # more workers than points: several workers own zero query points
+    d = make_dataset("uniform", 5, 4, seed=4)
+    cfg = SelfJoinConfig(eps=0.3, k=2, tile_size=8)
+    de = DistributedSelfJoinEngine(d, cfg, num_workers=8, assignment=assignment)
+    assert any(de.worker_query_index(k).size == 0 for k in range(8))
+    np.testing.assert_array_equal(de.count().counts, brute_counts(d, 0.3))
+
+
+def test_dist_empty_dataset():
+    d = np.zeros((0, 4), np.float32)
+    de = DistributedSelfJoinEngine(d, SelfJoinConfig(eps=0.1, k=2), num_workers=4)
+    res = de.count()
+    assert res.counts.shape == (0,)
+    assert res.stats.num_results == 0
+
+
+def test_pairs_overflow_retry_reports_exact_counts(monkeypatch):
+    """Regression: counts/|R| stay exact through the auto-grow retry path."""
+    d = make_dataset("uniform", 350, 4, seed=5)
+    eps = 0.45
+    # sabotage the size estimate so the first pass overflows and retries
+    monkeypatch.setattr(batching_mod, "estimate_result_size", lambda *a, **k: 1)
+    eng = SelfJoinEngine(d, SelfJoinConfig(eps=eps, k=2, tile_size=16, dim_block=8))
+    res = eng.pairs()
+    assert res.stats.overflow_retries > 0
+    truth = brute_counts(d, eps)
+    np.testing.assert_array_equal(res.counts, truth)
+    assert res.stats.num_results == int(truth.sum()) == len(res.pairs)
+    assert pair_set(res.pairs) == pair_set(brute_pairs(d, eps))

@@ -11,23 +11,15 @@ import textwrap
 
 import numpy as np
 
+from oracles import bipartite_counts as _bipartite_truth, brute_counts
 from repro.core import (
     DistributedSelfJoinEngine,
     SelfJoinConfig,
     SelfJoinEngine,
 )
-from repro.core.brute import brute_counts
 from repro.data import clustered_dataset, exponential_dataset
 
 CFG = SelfJoinConfig(eps=0.06, k=4, tile_size=16)
-
-
-def _bipartite_truth(q, d, eps):
-    d2 = (
-        (np.asarray(q, np.float64)[:, None, :] - np.asarray(d, np.float64)[None, :, :])
-        ** 2
-    ).sum(-1)
-    return (d2 <= np.float64(eps) ** 2).sum(1)
 
 
 def test_count_query_matches_brute_bipartite():

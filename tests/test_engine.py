@@ -4,6 +4,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from oracles import brute_counts, brute_pairs, pair_set as _pair_set
 from repro.core import (
     EngineConfig,
     SelfJoinConfig,
@@ -12,23 +13,11 @@ from repro.core import (
     self_join_hostloop,
 )
 from repro.core import batching as batching_mod
-from repro.core.brute import brute_counts, brute_pairs
-from repro.data import clustered_dataset, exponential_dataset, uniform_dataset
+from repro.data import exponential_dataset, uniform_dataset
 
 
-def _pair_set(pairs):
-    return set(map(tuple, np.asarray(pairs).tolist()))
-
-
-DATASETS = [
-    ("exp16", exponential_dataset(500, 16, seed=21), 0.06),
-    ("clustered32", clustered_dataset(400, 32, cluster_std=0.05, seed=22), 0.25),
-    ("uniform8", uniform_dataset(400, 8, seed=23), 0.3),
-]
-
-
-@pytest.mark.parametrize("name,d,eps", DATASETS, ids=[x[0] for x in DATASETS])
-def test_engine_counts_and_pairs_match_brute(name, d, eps):
+def test_engine_counts_and_pairs_match_brute(dataset_case):
+    name, d, eps = dataset_case
     cfg = SelfJoinConfig(eps=eps, k=4, tile_size=16, dim_block=8)
     eng = SelfJoinEngine(d, cfg)
     res_c = eng.count()

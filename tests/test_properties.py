@@ -9,8 +9,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import SelfJoinConfig, self_join
-from repro.core.brute import brute_counts
+from oracles import brute_counts, brute_pairs
+from repro.core import SelfJoinConfig, SelfJoinEngine, self_join
+from repro.core import batching
 from repro.core.grid import adjacent_cell_pairs, build_grid, build_tile_plan
 from repro.core.reorder import variance_reorder
 
@@ -93,3 +94,67 @@ def test_grid_invariants(d, eps):
 def test_self_pairs_always_included(d):
     res = self_join(d, SelfJoinConfig(eps=0.01, k=3, tile_size=8))
     assert (res.counts >= 1).all()  # every point finds at least itself
+
+
+@settings(max_examples=20, deadline=None)
+@given(dataset(), st.sampled_from([0.1, 0.25]))
+def test_grid_cell_assignment_roundtrips_point_order(d, eps):
+    """pts_sorted IS D[point_order], and each point lies in its owning cell."""
+    grid = build_grid(d, eps, k=3)
+    np.testing.assert_array_equal(grid.pts_sorted, d[grid.point_order])
+    # recomputing each sorted point's cell coords (same floor rule as
+    # build_grid) must land on its owning cell's stored coordinates
+    coords = (
+        np.floor(
+            grid.pts_sorted[:, : grid.k].astype(np.float64) / grid.bin_width
+        ).astype(np.int64)
+        - grid.origin[None, :]
+    )
+    cell_of_sorted = np.repeat(
+        np.arange(grid.num_cells, dtype=np.int64), grid.cell_count
+    )
+    np.testing.assert_array_equal(coords, grid.cell_coords[cell_of_sorted])
+    # and cell runs tile the sorted layout contiguously
+    starts = np.concatenate([[0], np.cumsum(grid.cell_count)[:-1]])
+    np.testing.assert_array_equal(grid.cell_start, starts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dataset(), st.sampled_from([0.05, 0.11, 0.23]))
+def test_sortidu_plan_covers_all_true_pairs(d, eps):
+    """The SORTIDU-pruned tile-pair plan is a superset of all true <=eps pairs."""
+    grid = build_grid(d, eps, k=3)
+    plan = build_tile_plan(grid, 8, sortidu=True)
+    tile_of_pos = np.empty(d.shape[0], np.int64)
+    for ti, (s, l) in enumerate(zip(plan.tile_start, plan.tile_len)):
+        tile_of_pos[s : s + l] = ti
+    pos_of_point = np.empty(d.shape[0], np.int64)
+    pos_of_point[grid.point_order] = np.arange(d.shape[0])
+    plan_pairs = set(zip(plan.pair_a.tolist(), plan.pair_b.tolist()))
+    for a, b in brute_pairs(d, eps):
+        ta = int(tile_of_pos[pos_of_point[a]])
+        tb = int(tile_of_pos[pos_of_point[b]])
+        assert (ta, tb) in plan_pairs, f"true pair {(a, b)} pruned"
+
+
+@settings(max_examples=10, deadline=None)
+@given(dataset(), st.sampled_from([0.1, 0.25]))
+def test_capacity_estimate_never_underallocates(d, eps):
+    """A full-sample size estimate (and its capacity) covers the true |R|."""
+    cfg = SelfJoinConfig(eps=eps, k=3, tile_size=8, dim_block=8)
+    eng = SelfJoinEngine(d, cfg)
+    est = batching.estimate_result_size(
+        np.asarray(eng._tiles), np.asarray(eng._tile_len), eng.plan,
+        eps=eps, dim_block=8, backend="jnp", sample_frac=1.0,
+    )
+    true_r = int(brute_counts(d, eps).sum())
+    assert est >= true_r
+    assert batching.suggest_pairs_capacity(est, 1.0) >= true_r
+    res = eng.pairs()  # auto-sized buffer must end up fitting exactly |R|
+    assert res.stats.pairs_capacity >= res.stats.num_results == true_r
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10**9), st.floats(0.0, 4.0))
+def test_suggest_capacity_never_below_estimate(est, headroom):
+    assert batching.suggest_pairs_capacity(est, headroom) >= est
