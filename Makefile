@@ -2,7 +2,7 @@
 
 PYTHON ?= python
 
-.PHONY: install ci test test-8dev bench-engine bench-smoke quickstart
+.PHONY: install ci test test-8dev bench-engine bench-smoke quickstart serve-demo
 
 install:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -19,12 +19,19 @@ test-8dev:
 bench-engine:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/bench_engine.py
 
-# Tiny-configuration runs of the distributed benchmarks (ring ppermute wire
-# pass + entity-partition balance on the indexed engine) so the distributed
-# tier cannot silently rot between PRs.
+# Tiny-configuration runs of the distributed + serving benchmarks (ring
+# ppermute wire pass, entity-partition balance on the indexed engine, and
+# the query-service warm-QPS/compile-reuse pass) so neither tier can
+# silently rot between PRs.
 bench-smoke:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py
+
+# The serving-tier demo: build + persist + reload a SimilarityIndex and
+# drive a mixed range/kNN request stream through QueryService.
+serve-demo:
+	PYTHONPATH=src $(PYTHON) examples/query_service.py

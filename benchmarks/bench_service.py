@@ -1,0 +1,80 @@
+"""Serving-tier throughput: warm QPS vs batch size, range vs kNN.
+
+The serving analogue of the engine's reuse benchmark: after the per-bucket
+executables are warm, a ``QueryService`` request costs host planning + one
+(or a few) dispatches of an already-compiled program, so throughput should
+scale with batch size.  Rows record queries/second at each batch size for
+``range_count`` and ``knn``, plus the compile-reuse contract of the stream
+(traces == number of shape buckets touched while warming).
+
+``--tiny`` (or BENCH_SMOKE=1) shrinks the dataset and batch grid so
+`make bench-smoke` keeps the serving path alive at CI scale.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import record
+from repro.core import SelfJoinConfig
+from repro.data import exponential_dataset
+from repro.join import QueryService, SimilarityIndex
+
+FULL = dict(n=40_000, dims=16, eps=0.04, batches=[1, 16, 128, 1024], reps=5, k=8)
+TINY = dict(n=2_000, dims=16, eps=0.06, batches=[4, 32, 128], reps=2, k=4)
+
+
+def run(tiny: bool = False):
+    p = TINY if tiny else FULL
+    d = exponential_dataset(p["n"], p["dims"], seed=5)
+    cfg = SelfJoinConfig(eps=p["eps"], k=4, tile_size=32)
+    service = QueryService(SimilarityIndex(d, cfg))
+    rng = np.random.default_rng(7)
+
+    for nq in p["batches"]:
+        q = d[rng.choice(p["n"], size=nq, replace=False)]
+        service.range_count(q, p["eps"])          # warm the bucket
+        t0 = time.perf_counter()
+        for _ in range(p["reps"]):
+            res = service.range_count(q, p["eps"])
+        dt = (time.perf_counter() - t0) / p["reps"]
+        assert res.stats.num_traces == 0, "warm request retraced"
+        record(
+            f"service/range_count/nq={nq}", dt * 1e6,
+            f"qps={nq / dt:.0f};bucket={res.stats.bucket};"
+            f"dispatches={res.stats.num_device_dispatches}",
+        )
+
+    for nq in p["batches"]:
+        q = d[rng.choice(p["n"], size=nq, replace=False)]
+        service.knn(q, p["k"])                    # warm (incl. expansion radii)
+        t0 = time.perf_counter()
+        for _ in range(p["reps"]):
+            res = service.knn(q, p["k"])
+        dt = (time.perf_counter() - t0) / p["reps"]
+        assert res.stats.num_traces == 0, "warm kNN retraced"
+        record(
+            f"service/knn{p['k']}/nq={nq}", dt * 1e6,
+            f"qps={nq / dt:.0f};eps_rounds={res.stats.eps_rounds};"
+            f"final_eps={res.stats.eps:.3f}",
+        )
+
+    t = service.total
+    record(
+        "service/stream-contract", float(t.num_traces),
+        f"traces={t.num_traces};buckets={sorted(service.buckets_used)};"
+        f"requests={t.num_requests};dispatches={t.num_device_dispatches}",
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny", action="store_true",
+        default=os.environ.get("BENCH_SMOKE") == "1",
+        help="CI-scale configuration (also via BENCH_SMOKE=1)",
+    )
+    run(tiny=ap.parse_args().tiny)

@@ -31,8 +31,9 @@ recompiles nothing.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +42,14 @@ import numpy as np
 from repro.core import batching as batching_mod
 from repro.core.grid import (
     GridIndex,
+    QueryTilePlan,
     TilePlan,
     build_grid,
     build_query_tile_plan,
     build_tile_plan,
+    pad_axis0,
 )
-from repro.core.reorder import variance_reorder
+from repro.core.reorder import apply_reorder, variance_reorder
 from repro.core.types import (
     EngineConfig,
     SelfJoinConfig,
@@ -114,10 +117,7 @@ _count_chunk_program = functools.partial(
 )(count_chunk_step)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("hit_cap", "dim_block", "backend", "interpret")
-)
-def _pairs_chunk_program(
+def pairs_chunk_step(
     buf,            # (cap + hit_cap, 2) int32 result buffer, original ids
     offset,         # ()  int32 pairs found so far (may exceed cap)
     max_chunk_hits, # ()  int32 largest per-chunk hit count seen
@@ -128,6 +128,14 @@ def _pairs_chunk_program(
     hit_cap, dim_block, backend, interpret,
 ):
     """One pairs-mode chunk: evaluate + compact into ``buf``, fully on device.
+
+    Like ``count_chunk_step`` this is the un-jitted body, so callers that
+    need their own trace accounting (the serving tier, ``repro.join``) can
+    wrap it in their own ``jax.jit``; the module-level jitted program below
+    serves the engine.  For a *bipartite* chunk, ``point_order`` is the
+    combined (query | data) position->original-id map and ``tile_start`` the
+    combined position table of ``SelfJoinEngine.prepare_query`` -- A-side
+    rows then decode to query ids and B-side rows to data ids.
 
     Compaction is rank-select, not scatter (scatter over the full C*T*T
     mask serializes badly on CPU XLA): a row-wise prefix sum over the hit
@@ -178,6 +186,11 @@ def _pairs_chunk_program(
     return buf, offset, max_chunk_hits
 
 
+_pairs_chunk_program = functools.partial(
+    jax.jit, static_argnames=("hit_cap", "dim_block", "backend", "interpret")
+)(pairs_chunk_step)
+
+
 @jax.jit
 def _counts_from_pairs(counts0, buf, num):
     """Per-point counts from the compacted pair buffer (original order)."""
@@ -190,6 +203,71 @@ def _counts_from_pairs(counts0, buf, num):
 def _unsort_counts(counts_sorted, point_order):
     """Grid-sorted counts -> original point order (device scatter)."""
     return jnp.zeros_like(counts_sorted).at[point_order].set(counts_sorted)
+
+
+def _chunk_list(
+    pair_a: np.ndarray, pair_b: np.ndarray, chunk: int, cache: dict
+) -> List[Tuple[jax.Array, jax.Array, int]]:
+    """Padded device chunks of a candidate pair list, cached per chunk size."""
+    got = cache.get(chunk)
+    if got is None:
+        got = [
+            (pa, pb, real)
+            for _, pa, pb, real in ops._chunks(pair_a, pair_b, chunk)
+        ]
+        cache[chunk] = got
+    return got
+
+
+# ---------------------------------------------------------------------------
+# The bipartite query-plan API (DESIGN.md #8).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QueryPlanTables:
+    """Device-ready combined (query | data) tables for one bipartite batch.
+
+    Produced by ``SelfJoinEngine.prepare_query`` and consumed by three
+    callers with one layout:
+
+      * ``SelfJoinEngine.count_query`` (the distributed tier's per-round
+        local join) runs the count chunk program over it;
+      * the serving tier (``repro.join.QueryService``) runs its own
+        trace-counted count *and* pairs programs over it, with
+        ``pad_queries_to`` rounding the query side up to a shape bucket so a
+        request stream reuses a bounded set of executables;
+      * the fused distributed packer keeps its own padding, but shares the
+        underlying ``build_query_plan`` host plan.
+
+    Layout contract: positions ``[0, n_slots)`` are query rows in q-sorted
+    order (real rows first, zero padding after), positions ``[n_slots,
+    n_slots + N)`` are the engine's grid-sorted data points.  ``tile_start``
+    and ``order`` address that combined position space, so the *same* arrays
+    serve counts mode (A-side scatter into a ``(n_slots,)`` vector; B-side
+    starts never read below ``n_slots + N``) and pairs mode (both sides
+    decode through ``order`` to original query rows / data ids).
+    """
+
+    eps: float                     # radius the plan was built for
+    nq: int                        # real query rows
+    n_slots: int                   # padded query-position space (>= nq)
+    qplan: QueryTilePlan           # the host-side plan (stats + q_order live here)
+    tiles: jax.Array               # (q_tile_rows + num_d_tiles, T, n_pad) f32
+    tile_len: jax.Array            # (q_tile_rows + num_d_tiles,) int32
+    tile_start: jax.Array          # combined position space (B side + n_slots)
+    order: jax.Array               # (n_slots + N,) int32 position -> original id
+    pair_a: np.ndarray             # (P,) int32 combined-table A (query-tile) index
+    pair_b: np.ndarray             # (P,) int32 combined-table B (data-tile) index
+    _chunk_cache: Dict[int, list] = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_pairs(self) -> int:
+        return int(self.pair_a.shape[0])
+
+    def chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
+        """Padded device chunks of the candidate pair list, cached per size."""
+        return _chunk_list(self.pair_a, self.pair_b, chunk, self._chunk_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +315,39 @@ class SelfJoinEngine:
         if self.num_points:
             self._build_index(config.eps)
 
+    @classmethod
+    def from_prebuilt(
+        cls,
+        pts: np.ndarray,
+        perm: Optional[np.ndarray],
+        grid: Optional[GridIndex],
+        plan: Optional[TilePlan],
+        index_eps: Optional[float],
+        config: SelfJoinConfig,
+        engine_config: Optional[EngineConfig] = None,
+    ) -> "SelfJoinEngine":
+        """Engine over an already-built index: no REORDER, no grid build.
+
+        The persistence path of ``repro.join.SimilarityIndex``: a server
+        restart loads the saved (perm, grid, plan) triple and only the
+        device placement runs again, so the restarted engine is
+        bit-identical to the one that was saved.
+        """
+        self = object.__new__(cls)
+        self.config = config
+        self.engine = engine_config or EngineConfig()
+        pts = np.ascontiguousarray(np.asarray(pts, dtype=np.float32))
+        self.num_points, self.num_dims = pts.shape
+        self._pts = pts
+        self._perm = None if perm is None else np.asarray(perm)
+        self._work = pts if self._perm is None else apply_reorder(pts, self._perm)
+        self.grid = grid
+        self.plan = plan
+        self._index_eps = None if index_eps is None else float(index_eps)
+        if self.grid is not None:
+            self._device_index()
+        return self
+
     # -- index ------------------------------------------------------------
 
     def _build_index(self, eps: float) -> None:
@@ -244,7 +355,11 @@ class SelfJoinEngine:
         self.grid = build_grid(self._work, eps, cfg.k)  # eps=0-safe (unit bins)
         self.plan = build_tile_plan(self.grid, cfg.tile_size, cfg.sortidu)
         self._index_eps = float(eps)
-        # device-resident state
+        self._device_index()
+
+    def _device_index(self) -> None:
+        """Place the built (grid, plan) index on device (shared with load)."""
+        cfg = self.config
         self._tile_start = jnp.asarray(self.plan.tile_start, jnp.int32)
         self._tile_len = jnp.asarray(self.plan.tile_len, jnp.int32)
         self._point_order = jnp.asarray(self.grid.point_order, jnp.int32)
@@ -263,16 +378,9 @@ class SelfJoinEngine:
 
     def _chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
         """Padded device chunks of the candidate pair list, cached."""
-        got = self._chunk_cache.get(chunk)
-        if got is None:
-            got = [
-                (pa, pb, real)
-                for _, pa, pb, real in ops._chunks(
-                    self.plan.pair_a, self.plan.pair_b, chunk
-                )
-            ]
-            self._chunk_cache[chunk] = got
-        return got
+        return _chunk_list(
+            self.plan.pair_a, self.plan.pair_b, chunk, self._chunk_cache
+        )
 
     def _base_stats(self, eps: float) -> SelfJoinStats:
         stats = SelfJoinStats(
@@ -312,9 +420,86 @@ class SelfJoinEngine:
             return None
         eps = self.config.eps if eps is None else float(eps)
         self._ensure_index(eps)
-        q_work = q_pts[:, self._perm] if self._perm is not None else q_pts
+        q_work = apply_reorder(q_pts, self._perm) if self._perm is not None else q_pts
         return build_query_tile_plan(
             self.grid, self.plan, q_work, self.config.sortidu
+        )
+
+    def prepare_query(
+        self,
+        q_pts: np.ndarray,
+        eps: Optional[float] = None,
+        *,
+        pad_queries_to: Optional[int] = None,
+    ) -> Optional[QueryPlanTables]:
+        """Build the device-ready combined (query | data) tables for ``q_pts``.
+
+        The query-plan API (DESIGN.md #8): everything between the host-side
+        ``build_query_plan`` and the chunk programs -- query tiling on
+        device, the concatenated (Q | D) tile table, the combined
+        position->original-id map, and the B-side index offset -- shared by
+        ``count_query`` and the serving tier.
+
+        ``pad_queries_to`` rounds the *query side* of every device array up
+        to that many rows (q-sorted points, query tiles, and the scatter
+        target all pad to the same bucket; padding tiles carry length 0 and
+        padded positions are never referenced by a valid lane), so all
+        batches in the same bucket share one compiled executable.  Returns
+        ``None`` when either side is empty.
+        """
+        eps = self.config.eps if eps is None else float(eps)
+        q_pts = np.ascontiguousarray(np.asarray(q_pts, dtype=np.float32))
+        nq = q_pts.shape[0]
+        if nq == 0 or self.num_points == 0:
+            return None
+        qplan = self.build_query_plan(q_pts, eps)
+        cfg = self.config
+        n_slots = nq if pad_queries_to is None else int(pad_queries_to)
+        if n_slots < nq:
+            raise ValueError(
+                f"pad_queries_to={n_slots} smaller than the batch ({nq})"
+            )
+        # every cell holds >= 1 point, so num_q_tiles <= nq <= n_slots: one
+        # bucket dimension pads the q-sorted rows AND the q-tile rows
+        qt_rows = qplan.num_q_tiles if pad_queries_to is None else n_slots
+        q_sorted = pad_axis0(qplan.q_sorted, n_slots)
+        q_start = pad_axis0(qplan.q_tile_start, qt_rows)
+        q_len = pad_axis0(qplan.q_tile_len, qt_rows)
+        q_tiles = ops.make_tiles_device(
+            jnp.asarray(q_sorted),
+            jnp.asarray(q_start, jnp.int32),
+            jnp.asarray(q_len, jnp.int32),
+            tile_size=cfg.tile_size,
+            dim_block=cfg.dim_block,
+        )
+        tiles = jnp.concatenate([q_tiles, self._tiles], axis=0)
+        tile_len = jnp.concatenate([jnp.asarray(q_len, jnp.int32), self._tile_len])
+        tile_start = jnp.concatenate(
+            [jnp.asarray(q_start, jnp.int32), self._tile_start + n_slots]
+        )
+        # position -> original id: query rows first (pad rows are never
+        # addressed by a valid lane; their fill value is irrelevant), then
+        # the data points' grid-sort permutation
+        order = jnp.concatenate(
+            [
+                jnp.asarray(
+                    pad_axis0(qplan.q_order.astype(np.int64), n_slots), jnp.int32
+                ),
+                self._point_order,
+            ]
+        )
+        pair_b = (qplan.pair_d.astype(np.int64) + qt_rows).astype(np.int32)
+        return QueryPlanTables(
+            eps=eps,
+            nq=nq,
+            n_slots=n_slots,
+            qplan=qplan,
+            tiles=tiles,
+            tile_len=tile_len,
+            tile_start=tile_start,
+            order=order,
+            pair_a=qplan.pair_q.astype(np.int32),
+            pair_b=pair_b,
         )
 
     def packed_tile_table(self, num_tiles: int):
@@ -390,11 +575,12 @@ class SelfJoinEngine:
         q_pts = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
         nq = q_pts.shape[0]
         cfg, eng = self.config, self.engine
-        if nq == 0 or self.num_points == 0:
+        tab = self.prepare_query(q_pts, eps)
+        if tab is None:
             return SelfJoinResult(
                 counts=np.zeros(nq, np.int64), stats=self._base_stats(eps)
             )
-        qplan = self.build_query_plan(q_pts, eps)
+        qplan = tab.qplan
 
         stats = self._base_stats(eps)
         stats.num_points = nq
@@ -403,33 +589,12 @@ class SelfJoinEngine:
         stats.num_candidates = qplan.num_candidates
         stats.num_tiles = qplan.num_q_tiles + self.plan.num_tiles
 
-        q_tile_start = jnp.asarray(qplan.q_tile_start, jnp.int32)
-        q_tile_len = jnp.asarray(qplan.q_tile_len, jnp.int32)
-        q_tiles = ops.make_tiles_device(
-            jnp.asarray(qplan.q_sorted),
-            q_tile_start,
-            q_tile_len,
-            tile_size=cfg.tile_size,
-            dim_block=cfg.dim_block,
-        )
-        # combined tile table: query tiles first, data tiles after -- the
-        # existing chunk program evaluates A x B tiles out of one array, so
-        # the bipartite join is just an index offset on the B side.  A-side
-        # tile_start addresses the q-sorted position space; B-side values are
-        # never used for scatter (only pair_a rows are accumulated).
-        tiles = jnp.concatenate([q_tiles, self._tiles], axis=0)
-        tile_len = jnp.concatenate([q_tile_len, self._tile_len])
-        tile_start = jnp.concatenate([q_tile_start, self._tile_start])
-        pair_b_off = qplan.pair_d.astype(np.int64) + qplan.num_q_tiles
-
-        counts_sorted = jnp.zeros(nq, jnp.int32)
+        counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
         skipped_tot = jnp.zeros((), jnp.int32)
-        for _, pa, pb, real in ops._chunks(
-            qplan.pair_q, pair_b_off.astype(np.int32), eng.count_chunk
-        ):
+        for pa, pb, real in tab.chunks(eng.count_chunk):
             counts_sorted, skipped_tot = _count_chunk_program(
                 counts_sorted, skipped_tot,
-                tiles, tile_len, tile_start,
+                tab.tiles, tab.tile_len, tab.tile_start,
                 pa, pb, real, eps,
                 dim_block=cfg.dim_block, shortc=cfg.shortc,
                 backend="pallas" if cfg.use_pallas else "jnp",

@@ -49,6 +49,26 @@ class GridIndex:
         """Cell edge length (eps, or 1.0 for the degenerate eps == 0 grid)."""
         return self.eps if self.eps > 0 else 1.0
 
+    @property
+    def data_bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-dimension (min, max) of the indexed points, reordered frame.
+
+        The serving tier's kNN search (``repro.join``) uses this to cap its
+        eps expansion: the diagonal of the joint query/data bounding box is
+        an upper bound on any pairwise distance, so one pass at that radius
+        is guaranteed to see every point.
+        """
+        got = getattr(self, "_bounds_cache", None)
+        if got is None:
+            if self.pts_sorted.shape[0] == 0:
+                z = np.zeros(self.n, np.float64)
+                got = (z, z)
+            else:
+                pts = self.pts_sorted.astype(np.float64)
+                got = (pts.min(axis=0), pts.max(axis=0))
+            self._bounds_cache = got  # static per grid; rebuilds make a new one
+        return got
+
 
 @dataclasses.dataclass
 class QueryTilePlan:

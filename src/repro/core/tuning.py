@@ -40,9 +40,14 @@ def estimate_k_costs(
     tile_size: int = 64,
     seed: int = 0,
 ) -> List[KEstimate]:
+    # one generator threads through the REORDER variance sample and every
+    # per-k mu sample: the k-cost estimates draw independent samples instead
+    # of re-seeding default_rng(seed) inside the loop (which made every k's
+    # mu sample identical to -- and correlated with -- the variance sample)
+    rng = np.random.default_rng(seed)
     pts = np.asarray(d, dtype=np.float32)
     if reorder:
-        pts, _ = variance_reorder(pts, sample_frac, seed)
+        pts, _ = variance_reorder(pts, sample_frac, rng=rng)
     n_pts, n = pts.shape
     out: List[KEstimate] = []
     for k in ks:
@@ -55,7 +60,6 @@ def estimate_k_costs(
         p = plan.num_pairs
         if p:
             n_sample = max(1, int(round(p * sample_frac)))
-            rng = np.random.default_rng(seed)
             sel = rng.choice(p, size=min(n_sample, p), replace=False)
             mu = float(
                 (plan.tile_len[plan.pair_a[sel]].astype(np.int64)
@@ -77,6 +81,10 @@ def estimate_k_costs(
 
 
 def select_k(d: np.ndarray, eps: float, ks: Sequence[int], **kw) -> int:
-    """argmin-total-ops k (the paper's selection rule)."""
+    """argmin-total-ops k (the paper's selection rule).
+
+    Deterministic under ties: the smaller k wins (cheaper index build and a
+    shallower 3^k adjacency), regardless of the order of ``ks``.
+    """
     ests = estimate_k_costs(d, eps, ks, **kw)
-    return min(ests, key=lambda e: e.total_ops).k
+    return min(ests, key=lambda e: (e.total_ops, e.k)).k

@@ -1,0 +1,11 @@
+# The online similarity query service (DESIGN.md #8): a persistent
+# device-resident index (build once, save/load across restarts) serving
+# batched epsilon range queries and kNN on top of the paper's grid join.
+from repro.join.index import SimilarityIndex  # noqa: F401
+from repro.join.service import (  # noqa: F401
+    KnnResult,
+    QueryService,
+    RangeCountResult,
+    RangePairsResult,
+    ServiceStats,
+)

@@ -1,0 +1,199 @@
+"""Persistent device-resident similarity index (DESIGN.md #8).
+
+``SimilarityIndex`` is the build-once half of the serving tier: it runs the
+paper's whole index-construction pipeline -- REORDER (persisting the dim
+permutation so incoming queries are permuted identically), ``select_k``
+auto-selection of the indexed dimension count, grid construction, and the
+packed tile table placed on device once -- and then answers nothing itself:
+``QueryService`` (``service.py``) serves queries over it.
+
+``save``/``load`` persist the *derived* index state (permutation, grid
+arrays, tile plan) next to the dataset in one ``.npz``, so a server process
+can restart without re-running REORDER or the grid build and the restarted
+index serves queries bit-identically to the one that was saved
+(``SelfJoinEngine.from_prebuilt`` only re-places the arrays on device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import QueryPlanTables, SelfJoinEngine
+from repro.core.grid import GridIndex, TilePlan
+from repro.core.reorder import apply_reorder
+from repro.core.tuning import select_k
+from repro.core.types import EngineConfig, SelfJoinConfig
+
+_SAVE_VERSION = 1
+
+_GRID_ARRAYS = (
+    "origin", "cells_per_dim", "strides", "point_order", "pts_sorted",
+    "cell_coords", "cell_ids", "cell_start", "cell_count",
+)
+_PLAN_ARRAYS = ("tile_start", "tile_len", "tile_cell", "pair_a", "pair_b")
+
+
+def _npz_path(path) -> str:
+    path = str(path)
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+class SimilarityIndex:
+    """Build-once, device-resident index over one dataset.
+
+    A thin ownership layer over ``SelfJoinEngine``: the engine holds the
+    REORDER permutation, the grid, the tile plan and the device-resident
+    packed tiles; this class adds auto-k selection at build time and the
+    persistence contract a serving process needs.
+
+    ``k_candidates`` (optional) runs the paper's Sec. 5.6 memory-op model
+    (``tuning.select_k``) over the given candidate list and bakes the winner
+    into the stored config, so a restarted server never re-tunes.
+    """
+
+    def __init__(
+        self,
+        d: np.ndarray,
+        config: SelfJoinConfig,
+        engine_config: Optional[EngineConfig] = None,
+        *,
+        k_candidates: Optional[Sequence[int]] = None,
+    ):
+        pts = np.ascontiguousarray(np.asarray(d, dtype=np.float32))
+        if k_candidates is not None and pts.shape[0] > 2:
+            k = select_k(
+                pts, config.eps, list(k_candidates),
+                reorder=config.reorder, sample_frac=config.sample_frac,
+                tile_size=config.tile_size,
+            )
+            config = dataclasses.replace(config, k=k)
+        self.engine = SelfJoinEngine(pts, config, engine_config)
+
+    @classmethod
+    def _wrap(cls, engine: SelfJoinEngine) -> "SimilarityIndex":
+        self = object.__new__(cls)
+        self.engine = engine
+        return self
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def config(self) -> SelfJoinConfig:
+        return self.engine.config
+
+    @property
+    def num_points(self) -> int:
+        return self.engine.num_points
+
+    @property
+    def num_dims(self) -> int:
+        return self.engine.num_dims
+
+    @property
+    def points(self) -> np.ndarray:
+        """The indexed dataset, original row order and coordinate frame."""
+        return self.engine._pts
+
+    @property
+    def perm(self) -> Optional[np.ndarray]:
+        """The persisted REORDER dim permutation (None when reorder=False)."""
+        return self.engine._perm
+
+    @property
+    def index_eps(self) -> Optional[float]:
+        """Radius the current grid was built for (queries at <= this reuse it)."""
+        return self.engine._index_eps
+
+    def transform_queries(self, q: np.ndarray) -> np.ndarray:
+        """Apply the dataset's REORDER permutation to external query points."""
+        if self.perm is None:
+            return np.asarray(q)
+        return apply_reorder(q, self.perm)
+
+    def bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-dimension (min, max) of the dataset, REORDERED frame, float64.
+
+        Delegates to ``GridIndex.data_bounds`` (the grid stores the sorted
+        reordered points); combine only with queries passed through
+        ``transform_queries`` so both sides share the frame.
+        """
+        if self.engine.grid is not None:
+            return self.engine.grid.data_bounds
+        z = np.zeros(self.num_dims, np.float64)
+        return z, z
+
+    def prepare_query(
+        self,
+        q: np.ndarray,
+        eps: Optional[float] = None,
+        *,
+        pad_queries_to: Optional[int] = None,
+    ) -> Optional[QueryPlanTables]:
+        """The engine's bipartite query-plan API (original-frame queries)."""
+        return self.engine.prepare_query(q, eps, pad_queries_to=pad_queries_to)
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path) -> str:
+        """Write dataset + derived index state to ``path`` (.npz); return it."""
+        eng = self.engine
+        meta = {
+            "version": _SAVE_VERSION,
+            "config": dataclasses.asdict(eng.config),
+            "index_eps": eng._index_eps,
+            "has_perm": eng._perm is not None,
+            "has_index": eng.grid is not None,
+        }
+        arrays = {"pts": eng._pts}
+        if eng._perm is not None:
+            arrays["perm"] = np.asarray(eng._perm)
+        if eng.grid is not None:
+            g, p = eng.grid, eng.plan
+            meta["grid"] = {
+                "eps": g.eps, "k": g.k, "n": g.n, "u_dim": g.u_dim,
+            }
+            meta["plan"] = {
+                "tile_size": p.tile_size,
+                "num_tile_pairs_total": p.num_tile_pairs_total,
+                "num_candidates": p.num_candidates,
+            }
+            for name in _GRID_ARRAYS:
+                arrays[f"grid_{name}"] = getattr(g, name)
+            for name in _PLAN_ARRAYS:
+                arrays[f"plan_{name}"] = getattr(p, name)
+        path = _npz_path(path)
+        with open(path, "wb") as f:
+            np.savez_compressed(f, meta=np.array(json.dumps(meta)), **arrays)
+        return path
+
+    @classmethod
+    def load(
+        cls, path, engine_config: Optional[EngineConfig] = None
+    ) -> "SimilarityIndex":
+        """Rebuild the index from ``save`` output without host recompute."""
+        with np.load(_npz_path(path), allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            if meta["version"] != _SAVE_VERSION:
+                raise ValueError(
+                    f"unsupported index save version {meta['version']}"
+                )
+            pts = z["pts"]
+            perm = z["perm"] if meta["has_perm"] else None
+            grid = plan = None
+            if meta["has_index"]:
+                grid = GridIndex(
+                    **meta["grid"],
+                    **{name: z[f"grid_{name}"] for name in _GRID_ARRAYS},
+                )
+                plan = TilePlan(
+                    **meta["plan"],
+                    **{name: z[f"plan_{name}"] for name in _PLAN_ARRAYS},
+                )
+            config = SelfJoinConfig(**meta["config"])
+            engine = SelfJoinEngine.from_prebuilt(
+                pts, perm, grid, plan, meta["index_eps"], config, engine_config
+            )
+        return cls._wrap(engine)

@@ -1,0 +1,368 @@
+"""Batched online query serving over a ``SimilarityIndex`` (DESIGN.md #8).
+
+``QueryService`` answers three request kinds against one resident index:
+
+  ``range_count(q, eps)``  per-query counts of indexed points within eps;
+  ``range_pairs(q, eps)``  the materialized (query row, data id) pairs;
+  ``knn(q, k)``            k nearest indexed points per query, found by
+                           adaptive eps expansion on the count program
+                           (double the radius until every query holds >= k
+                           candidates, then one pairs pass + exact top-k).
+
+Compilation discipline -- the property that makes this a *service* rather
+than a loop of one-shot joins: request batches are padded to power-of-two
+shape buckets (``SelfJoinEngine.prepare_query(pad_queries_to=...)``), eps is
+always a traced scalar, and the two chunk programs are jitted once per
+service with a host-side trace counter in the traced body, so an arbitrary
+request stream compiles at most one count and one pairs executable per
+bucket.  ``ServiceStats.num_traces`` reports it per request and
+``QueryService.total`` accumulates it across the stream -- the serving
+analogue of the fused ring's ``fused_traces == 1`` contract.
+
+kNN tie-breaking is deterministic: neighbours sort by (distance, data id),
+and queries with fewer than k reachable neighbours (k >= |D|) pad with
+id -1 / distance +inf.  The eps expansion is capped at the diagonal of the
+joint query/data bounding box, which provably contains every candidate, so
+termination never depends on the data distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    QueryPlanTables,
+    count_chunk_step,
+    pairs_chunk_step,
+)
+from repro.join.index import SimilarityIndex
+
+_MAX_HITCAP_RETRIES = 8
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Per-request (and, via ``QueryService.total``, cumulative) counters."""
+
+    num_requests: int = 0        # requests served (1 per response object)
+    num_queries: int = 0         # query rows in the batch
+    bucket: int = 0              # padded slot count the batch was served in
+    eps: float = 0.0             # final radius evaluated
+    eps_rounds: int = 0          # kNN eps-expansion count passes (1 = no growth)
+    num_traces: int = 0          # NEW chunk-program traces this request caused
+    num_device_dispatches: int = 0  # chunk-program launches
+    num_candidates: int = 0      # index-filtered point comparisons
+    num_results: int = 0         # neighbours counted / pairs returned
+    index_rebuilds: int = 0      # grid rebuilds forced by eps above the index radius
+
+    def accumulate(self, other: "ServiceStats") -> None:
+        self.num_requests += other.num_requests
+        self.num_queries += other.num_queries
+        self.bucket = max(self.bucket, other.bucket)
+        self.eps = max(self.eps, other.eps)
+        self.eps_rounds += other.eps_rounds
+        self.num_traces += other.num_traces
+        self.num_device_dispatches += other.num_device_dispatches
+        self.num_candidates += other.num_candidates
+        self.num_results += other.num_results
+        self.index_rebuilds += other.index_rebuilds
+
+
+@dataclasses.dataclass
+class RangeCountResult:
+    counts: np.ndarray           # (nq,) int64, batch row order
+    stats: ServiceStats
+
+
+@dataclasses.dataclass
+class RangePairsResult:
+    pairs: np.ndarray            # (R, 2) int32 (query row, data id), lexsorted
+    counts: np.ndarray           # (nq,) int64
+    stats: ServiceStats
+
+
+@dataclasses.dataclass
+class KnnResult:
+    indices: np.ndarray          # (nq, k) int64 data ids, -1 where < k exist
+    distances: np.ndarray        # (nq, k) float64, +inf where < k exist
+    counts: np.ndarray           # (nq,) int64 candidates at the final radius
+    stats: ServiceStats
+
+
+class QueryService:
+    """Batched range + kNN serving over one ``SimilarityIndex``.
+
+    Queries are given in ORIGINAL coordinates; the service permutes them
+    with the index's persisted REORDER permutation.  A radius above the
+    index build radius transparently rebuilds the grid (host-side, counted
+    in ``stats.index_rebuilds``); radii at or below it reuse everything.
+    """
+
+    def __init__(self, index: SimilarityIndex, *, min_bucket: int = 16):
+        if min_bucket < 1:
+            raise ValueError("min_bucket must be >= 1")
+        self.index = index
+        self.min_bucket = int(min_bucket)
+        self.total = ServiceStats()
+        self.buckets_used: Set[int] = set()
+        self._trace_count = 0
+        # the radius the service PINS the index at: requests above it grow
+        # the grid temporarily, and _finish restores this one (see below)
+        self._serve_eps = index.index_eps
+
+        cfg = index.config
+        eng = index.engine.engine
+        self._count_chunk = eng.count_chunk
+        self._pairs_chunk = eng.pairs_chunk
+        backend = "pallas" if cfg.use_pallas else "jnp"
+
+        # The service's two executables, jitted once per service instance.
+        # The bodies run ONLY when XLA traces a new (bucket) shape, so the
+        # counter increments measure exactly the compile-reuse contract.
+        def _count_step(counts, tiles, tile_len, tile_start, pa, pb, real, eps):
+            self._trace_count += 1
+            counts, _ = count_chunk_step(
+                counts, jnp.zeros((), jnp.int32),
+                tiles, tile_len, tile_start, pa, pb, real, eps,
+                dim_block=cfg.dim_block, shortc=cfg.shortc,
+                backend=backend, interpret=eng.interpret,
+            )
+            return counts
+
+        def _pairs_step(
+            buf, offset, max_hits, tiles, tile_len, tile_start, order,
+            pa, pb, real, eps, *, hit_cap,
+        ):
+            self._trace_count += 1
+            return pairs_chunk_step(
+                buf, offset, max_hits, tiles, tile_len, tile_start, order,
+                pa, pb, real, eps,
+                hit_cap=hit_cap, dim_block=cfg.dim_block,
+                backend=backend, interpret=eng.interpret,
+            )
+
+        self._count_step = jax.jit(_count_step)
+        self._pairs_step = jax.jit(_pairs_step, static_argnames=("hit_cap",))
+
+    # -- bucketing ---------------------------------------------------------
+
+    def bucket_size(self, nq: int) -> int:
+        """Power-of-two slot count (>= min_bucket) the batch is padded to."""
+        return 1 << (max(int(nq), self.min_bucket) - 1).bit_length()
+
+    # -- internal execution ------------------------------------------------
+
+    def _prepare(
+        self, q: np.ndarray, eps: float, stats: ServiceStats
+    ) -> Optional[QueryPlanTables]:
+        before = self.index.index_eps
+        bucket = self.bucket_size(q.shape[0])
+        tab = self.index.prepare_query(q, eps, pad_queries_to=bucket)
+        if self.index.index_eps != before:
+            stats.index_rebuilds += 1
+        stats.bucket = bucket
+        self.buckets_used.add(bucket)
+        return tab
+
+    def _run_counts(
+        self, tab: QueryPlanTables, eps: float, stats: ServiceStats
+    ) -> np.ndarray:
+        counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
+        for pa, pb, real in tab.chunks(self._count_chunk):
+            counts_sorted = self._count_step(
+                counts_sorted, tab.tiles, tab.tile_len, tab.tile_start,
+                pa, pb, real, jnp.float32(eps),
+            )
+            stats.num_device_dispatches += 1
+        stats.num_candidates += tab.qplan.num_candidates
+        cs = np.asarray(counts_sorted)
+        counts = np.zeros(tab.nq, np.int64)
+        counts[tab.qplan.q_order] = cs[: tab.nq]
+        return counts
+
+    def _run_pairs(
+        self, tab: QueryPlanTables, eps: float, total: int, stats: ServiceStats
+    ) -> np.ndarray:
+        """One pairs pass sized exactly from the known count total."""
+        t = int(self.index.config.tile_size)
+        flat_per_chunk = self._pairs_chunk * t * t
+        hit_cap = min(flat_per_chunk, 4096)
+        cap = 1 << (max(int(total), 1) - 1).bit_length()  # pow2: bounded trace keys
+        for _ in range(_MAX_HITCAP_RETRIES + 1):
+            buf = jnp.zeros((cap + hit_cap, 2), jnp.int32)
+            offset = jnp.zeros((), jnp.int32)
+            max_hits = jnp.zeros((), jnp.int32)
+            for pa, pb, real in tab.chunks(self._pairs_chunk):
+                buf, offset, max_hits = self._pairs_step(
+                    buf, offset, max_hits,
+                    tab.tiles, tab.tile_len, tab.tile_start, tab.order,
+                    pa, pb, real, jnp.float32(eps), hit_cap=hit_cap,
+                )
+                stats.num_device_dispatches += 1
+            if int(max_hits) <= hit_cap:
+                break
+            # a single chunk outgrew the rank window: widen to the observed
+            # maximum (pow2 so the retry shapes stay bounded) and redo
+            hit_cap = min(
+                flat_per_chunk, 1 << (int(max_hits) - 1).bit_length()
+            )
+        num = int(offset)
+        if num != total:
+            raise RuntimeError(
+                f"pairs pass found {num} pairs but the count pass said {total}"
+            )
+        pairs = np.asarray(buf[:num])
+        if num:
+            srt = np.lexsort((pairs[:, 1], pairs[:, 0]))
+            pairs = np.ascontiguousarray(pairs[srt])
+        return pairs
+
+    def _finish(self, stats: ServiceStats, traces_before: int) -> ServiceStats:
+        # restore the build-radius index if this request grew it (a kNN
+        # expansion or an over-radius range query): a coarse large-eps grid
+        # left behind would silently cost every later request its candidate
+        # filtering AND its warm per-bucket executables (the tile-table
+        # shapes change).  The rebuild is deterministic, so the restored
+        # grid re-hits the executables compiled before this request.
+        eng = self.index.engine
+        if self._serve_eps is not None and eng._index_eps != self._serve_eps:
+            eng._build_index(self._serve_eps)
+            stats.index_rebuilds += 1
+        stats.num_requests = 1
+        stats.num_traces = self._trace_count - traces_before
+        self.total.accumulate(stats)
+        return stats
+
+    def _eps_cap(self, q: np.ndarray) -> float:
+        """Diagonal of the joint query/data bounding box: a provable upper
+        bound on any query-to-data distance (small fp slack added).
+
+        ``index.bounds()`` is in the reordered frame, so the queries are
+        transformed before the per-dim extents combine (the diagonal length
+        itself is permutation-invariant)."""
+        lo_d, hi_d = self.index.bounds()
+        q64 = self.index.transform_queries(q).astype(np.float64)
+        lo = np.minimum(lo_d, q64.min(axis=0))
+        hi = np.maximum(hi_d, q64.max(axis=0))
+        diag = float(np.sqrt(((hi - lo) ** 2).sum()))
+        return diag * (1.0 + 2**-10) + 1e-6
+
+    # -- requests ----------------------------------------------------------
+
+    def range_count(
+        self, q: np.ndarray, eps: Optional[float] = None
+    ) -> RangeCountResult:
+        """Per-query counts of indexed points within eps (self not excluded)."""
+        q = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
+        eps = self.index.config.eps if eps is None else float(eps)
+        stats = ServiceStats(num_queries=q.shape[0], eps=eps)
+        traces0 = self._trace_count
+        counts = np.zeros(q.shape[0], np.int64)
+        tab = self._prepare(q, eps, stats) if q.shape[0] else None
+        if tab is not None:
+            counts = self._run_counts(tab, eps, stats)
+        stats.num_results = int(counts.sum())
+        return RangeCountResult(counts=counts, stats=self._finish(stats, traces0))
+
+    def range_pairs(
+        self, q: np.ndarray, eps: Optional[float] = None
+    ) -> RangePairsResult:
+        """All (query row, data id) pairs within eps, lexsorted.
+
+        Runs the count program first (reusing the same plan tables), so the
+        pairs buffer is sized to the exact result and never overflows.
+        """
+        q = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
+        eps = self.index.config.eps if eps is None else float(eps)
+        stats = ServiceStats(num_queries=q.shape[0], eps=eps)
+        traces0 = self._trace_count
+        counts = np.zeros(q.shape[0], np.int64)
+        pairs = np.zeros((0, 2), np.int32)
+        tab = self._prepare(q, eps, stats) if q.shape[0] else None
+        if tab is not None:
+            counts = self._run_counts(tab, eps, stats)
+            total = int(counts.sum())
+            if total:
+                pairs = self._run_pairs(tab, eps, total, stats)
+        stats.num_results = int(counts.sum())
+        return RangePairsResult(
+            pairs=pairs, counts=counts, stats=self._finish(stats, traces0)
+        )
+
+    def knn(
+        self, q: np.ndarray, k: int, eps0: Optional[float] = None
+    ) -> KnnResult:
+        """k nearest indexed points per query, exact, ties broken by data id.
+
+        Adaptive eps expansion (Hybrid KNN-Join, arXiv:1810.04758, on the
+        range-query index of arXiv:1803.04120): run the count program at a
+        starting radius (``eps0``, default the index build radius), double
+        it until every query holds >= min(k, |D|) candidates (capped at the
+        joint bounding-box diagonal, where every point is a candidate), then
+        materialize pairs once at the final radius and take the exact top-k
+        by (distance, data id) per query.
+        """
+        q = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
+        nq = q.shape[0]
+        k = int(k)
+        if k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        n_d = self.index.num_points
+        stats = ServiceStats(num_queries=nq)
+        traces0 = self._trace_count
+        indices = np.full((nq, k), -1, np.int64)
+        distances = np.full((nq, k), np.inf, np.float64)
+        counts = np.zeros(nq, np.int64)
+        if nq == 0 or n_d == 0 or k == 0:
+            return KnnResult(
+                indices=indices, distances=distances, counts=counts,
+                stats=self._finish(stats, traces0),
+            )
+
+        k_eff = min(k, n_d)
+        eps_cap = self._eps_cap(q)
+        eps = self.index.config.eps if eps0 is None else float(eps0)
+        if eps <= 0.0:  # an eps==0 index would never grow by doubling
+            eps = eps_cap / 1024.0
+        eps = min(eps, eps_cap)
+        while True:
+            tab = self._prepare(q, eps, stats)
+            counts = self._run_counts(tab, eps, stats)
+            stats.eps_rounds += 1
+            if (counts >= k_eff).all() or eps >= eps_cap:
+                break
+            eps = min(2.0 * eps, eps_cap)
+        stats.eps = eps
+
+        pairs = self._run_pairs(tab, eps, int(counts.sum()), stats)
+        indices, distances = self._topk_from_pairs(q, pairs, k, nq)
+        stats.num_results = int((indices >= 0).sum())
+        return KnnResult(
+            indices=indices, distances=distances, counts=counts,
+            stats=self._finish(stats, traces0),
+        )
+
+    def _topk_from_pairs(
+        self, q: np.ndarray, pairs: np.ndarray, k: int, nq: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact per-query top-k over the candidate pairs, float64 distances."""
+        indices = np.full((nq, k), -1, np.int64)
+        distances = np.full((nq, k), np.inf, np.float64)
+        if pairs.shape[0] == 0:
+            return indices, distances
+        qi = pairs[:, 0].astype(np.int64)
+        di = pairs[:, 1].astype(np.int64)
+        diffs = q[qi].astype(np.float64) - self.index.points[di].astype(np.float64)
+        dist = np.sqrt(np.einsum("ij,ij->i", diffs, diffs))
+        srt = np.lexsort((di, dist, qi))   # by query, then distance, then id
+        qi, di, dist = qi[srt], di[srt], dist[srt]
+        seg = np.concatenate([[0], np.cumsum(np.bincount(qi, minlength=nq))])
+        rank = np.arange(qi.shape[0], dtype=np.int64) - seg[qi]
+        sel = rank < k
+        indices[qi[sel], rank[sel]] = di[sel]
+        distances[qi[sel], rank[sel]] = dist[sel]
+        return indices, distances

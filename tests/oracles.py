@@ -49,6 +49,29 @@ def pair_set(pairs) -> set:
     return set(map(tuple, np.asarray(pairs).tolist()))
 
 
+def brute_topk(q: np.ndarray, d: np.ndarray, k: int):
+    """Exact kNN ground truth: (indices, distances), both (|q|, k).
+
+    Float64 distances; ties broken by data index (ascending); queries with
+    fewer than k reachable points (k > |D|) pad with -1 / +inf -- the
+    serving tier's kNN contract (``repro.join.QueryService.knn``).
+    """
+    q64 = np.asarray(q, np.float64)
+    d64 = np.asarray(d, np.float64)
+    nq, nd = q64.shape[0], d64.shape[0]
+    indices = np.full((nq, k), -1, np.int64)
+    distances = np.full((nq, k), np.inf, np.float64)
+    if nd == 0 or k == 0:
+        return indices, distances
+    ids = np.arange(nd)
+    for i in range(nq):
+        dist = np.sqrt(((q64[i] - d64) ** 2).sum(axis=1))
+        order = np.lexsort((ids, dist))[: min(k, nd)]
+        indices[i, : order.shape[0]] = order
+        distances[i, : order.shape[0]] = dist[order]
+    return indices, distances
+
+
 def make_dataset(kind: str, n: int, dims: int, seed: int = 0) -> np.ndarray:
     """One generator for every distribution the test matrix exercises."""
     if kind == "uniform":

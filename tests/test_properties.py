@@ -9,11 +9,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from oracles import brute_counts, brute_pairs
+from oracles import brute_counts, brute_pairs, brute_topk
 from repro.core import SelfJoinConfig, SelfJoinEngine, self_join
 from repro.core import batching
 from repro.core.grid import adjacent_cell_pairs, build_grid, build_tile_plan
-from repro.core.reorder import variance_reorder
+from repro.core.reorder import apply_reorder, inverse_perm, variance_reorder
+from repro.join import QueryService, SimilarityIndex
 
 
 def _data(draw, max_n=200, max_d=12):
@@ -58,6 +59,39 @@ def test_reorder_preserves_pairwise_distances(d, seed):
     dd = np.linalg.norm(d[i] - d[j])
     rr = np.linalg.norm(r[i] - r[j])
     assert abs(dd - rr) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(dataset(), st.integers(0, 2**31 - 1))
+def test_apply_reorder_roundtrips_external_points(d, seed):
+    """External points permute identically to the dataset, and invert back.
+
+    The serving contract: ``variance_reorder``'s output IS ``apply_reorder``
+    of its permutation, queries permuted with the persisted perm land in the
+    index's frame, and ``inverse_perm`` undoes it exactly.
+    """
+    r, perm = variance_reorder(d, 0.05, seed % 1000)
+    np.testing.assert_array_equal(r, apply_reorder(d, perm))
+    external = d[:: max(1, d.shape[0] // 7)] + np.float32(1 / 64)
+    round_trip = apply_reorder(apply_reorder(external, perm), inverse_perm(perm))
+    np.testing.assert_array_equal(round_trip, external)
+    inv = inverse_perm(perm)
+    np.testing.assert_array_equal(perm[inv], np.arange(d.shape[1]))
+    np.testing.assert_array_equal(inv[perm], np.arange(d.shape[1]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(dataset(), st.integers(1, 9))
+def test_knn_equals_bruteforce_topk(d, k):
+    """Service kNN == float64 brute-force top-k, ties by data id, any data."""
+    svc = QueryService(
+        SimilarityIndex(d, SelfJoinConfig(eps=0.2, k=3, tile_size=8, dim_block=8))
+    )
+    q = d[: min(16, d.shape[0])]
+    res = svc.knn(q, k)
+    want_idx, want_dist = brute_topk(q, d, k)
+    np.testing.assert_array_equal(res.indices, want_idx)
+    np.testing.assert_array_equal(res.distances, want_dist)
 
 
 @settings(max_examples=15, deadline=None)

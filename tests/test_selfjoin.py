@@ -123,6 +123,30 @@ def test_select_k_prefers_moderate_k():
     assert by_k[12].search_ops > by_k[6].search_ops
 
 
+def test_k_cost_samples_are_independent_and_deterministic():
+    d = exponential_dataset(1500, 16, seed=17)
+    ks = [2, 3, 4, 6]
+    a = estimate_k_costs(d, 0.05, ks)
+    b = estimate_k_costs(d, 0.05, ks)
+    # same seed -> identical estimates (one generator threads the whole run)
+    assert [(e.k, e.total_ops) for e in a] == [(e.k, e.total_ops) for e in b]
+    # per-k mu samples draw from the advancing generator stream: the same k
+    # estimated twice in one run sees two DIFFERENT samples.  (The old bug
+    # re-built default_rng(seed) inside the loop, so every k's mu sample was
+    # the identical index sequence -- under it this assertion fails.)
+    dup = estimate_k_costs(d, 0.05, [4, 4, 4])
+    assert len({e.compare_ops for e in dup}) > 1
+
+
+def test_select_k_ties_prefer_smaller_k_any_order():
+    d = exponential_dataset(800, 16, seed=18)
+    ks = [2, 3, 4, 6, 8]
+    # candidate order must not matter (ties resolve to the smaller k)
+    assert select_k(d, 0.05, ks) == select_k(d, 0.05, list(reversed(ks)))
+    # duplicated candidates are exact ties: the duplicate never shadows
+    assert select_k(d, 0.05, [4, 4, 4]) == 4
+
+
 def test_empty_and_tiny_inputs():
     empty = np.zeros((0, 8), np.float32)
     res = self_join(empty, SelfJoinConfig(eps=0.1, k=2))
