@@ -2,12 +2,12 @@
 
 PYTHON ?= python
 
-.PHONY: install ci test test-8dev bench-engine bench-smoke quickstart serve-demo
+.PHONY: install ci test test-8dev bench-engine bench-smoke bench-compare bench-baseline quickstart serve-demo
 
 install:
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
-ci: install test test-8dev bench-smoke
+ci: install test test-8dev bench-smoke bench-compare
 
 test:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q --durations=15 --budget-seconds 1800
@@ -19,14 +19,31 @@ test-8dev:
 bench-engine:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/bench_engine.py
 
-# Tiny-configuration runs of the distributed + serving benchmarks (ring
-# ppermute wire pass, entity-partition balance on the indexed engine, and
-# the query-service warm-QPS/compile-reuse pass) so neither tier can
-# silently rot between PRs.
+# Tiny-configuration runs of the distributed + serving + hybrid-tier
+# benchmarks (ring ppermute wire pass, entity-partition balance on the
+# indexed engine, the query-service warm-QPS/compile-reuse pass, and the
+# dense-vs-indexed crossover sweep) so no tier can silently rot between
+# PRs.  bench_dense/bench_service also drop BENCH_*.json into
+# BENCH_OUT_DIR (default .bench_out) for bench-compare.
 bench-smoke:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_dense.py
+
+# Regression gate: rerun the JSON-emitting benchmarks at tiny scale and
+# diff against the committed baselines (contracts exact, wall times within
+# a slack factor; see benchmarks/compare.py).  Non-zero exit on regression.
+bench-compare:
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_dense.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
+	PYTHONPATH=src:. $(PYTHON) benchmarks/compare.py
+
+# Regenerate the committed baselines in-place (run on a quiet machine,
+# review the diff, commit).
+bench-baseline:
+	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_dense.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_service.py
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -1,0 +1,100 @@
+"""Dense vs indexed tier across dimensionality (DESIGN.md #9).
+
+The hybrid-execution figure: sweep dims over the paper's exponential
+workload (lambda=40, eps=0.06) and measure the warm self-join wall time of
+each tier plus the cost model's ``auto`` pick at every point.  As dims grow
+the grid's first-k filtering power decays (candidate ratio -> 1) while the
+dense tier's full tile cross product grows only linearly in padded width --
+so the sweep crosses over, and the model must track it.
+
+Every point asserts tier parity (identical counts) before timing, so the
+figure cannot be produced by a wrong kernel.  Emits ``BENCH_dense.json``
+(see ``common.emit_bench_json``): the cost model's per-dims decisions and
+the parity verdict are exact contracts; wall times are slack-gated
+metrics; the measured wall-time crossover is recorded as info.
+
+``--tiny`` (or BENCH_SMOKE=1) shrinks |D| and the dims grid for
+``make bench-smoke`` / ``make bench-compare`` at CI scale.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from benchmarks.common import emit_bench_json, record, timeit
+from repro.core import SelfJoinConfig, SelfJoinEngine
+from repro.data import exponential_dataset
+
+FULL = dict(n=4_000, dims_sweep=[2, 3, 4, 6, 8, 12, 16, 24, 32], reps=3)
+TINY = dict(n=1_200, dims_sweep=[2, 4, 6, 8, 16], reps=2)
+
+EPS = 0.06  # the paper's expo-4D working point, held across the sweep
+
+
+def _cfg(dims: int, mode: str) -> SelfJoinConfig:
+    return SelfJoinConfig(
+        eps=EPS, k=min(6, dims), tile_size=16, dim_block=8, execution=mode
+    )
+
+
+def run(tiny: bool = False):
+    p = TINY if tiny else FULL
+    contracts: dict = {}
+    metrics: dict = {}
+    auto_crossover = None   # first dims where the model picks dense
+    wall_crossover = None   # first dims where dense actually measured faster
+
+    for dims in p["dims_sweep"]:
+        d = exponential_dataset(p["n"], dims, seed=9)
+        eng = {m: SelfJoinEngine(d, _cfg(dims, m)) for m in ("indexed", "dense")}
+        res = {m: e.count() for m, e in eng.items()}      # warm + correctness
+        assert np.array_equal(
+            res["indexed"].counts, res["dense"].counts
+        ), f"tier parity broke at dims={dims}"
+        us = {m: timeit(e.count, p["reps"]) for m, e in eng.items()}
+
+        dec = SelfJoinEngine(d, _cfg(dims, "auto")).resolve_execution()
+        contracts[f"auto_tier/dims={dims}"] = dec.execution
+        if auto_crossover is None and dec.execution == "dense":
+            auto_crossover = dims
+        if wall_crossover is None and us["dense"] < us["indexed"]:
+            wall_crossover = dims
+
+        for m in ("indexed", "dense"):
+            metrics[f"{m}_us/dims={dims}"] = us[m]
+            record(
+                f"dense/{m}/dims={dims}", us[m],
+                f"picked={dec.execution};"
+                f"cost_indexed={dec.cost_indexed:.3g};"
+                f"cost_dense={dec.cost_dense:.3g}",
+            )
+
+    contracts["parity"] = "ok"   # every sweep point count-matched above
+    record(
+        "dense/crossover", float(auto_crossover or 0),
+        f"auto_crossover_dims={auto_crossover};"
+        f"wall_crossover_dims={wall_crossover}",
+    )
+    emit_bench_json(
+        "dense",
+        contracts=contracts,
+        metrics=metrics,
+        info={
+            "n": p["n"], "eps": EPS, "dims_sweep": p["dims_sweep"],
+            "auto_crossover_dims": auto_crossover,
+            "wall_crossover_dims": wall_crossover,
+            "tiny": tiny,
+        },
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny", action="store_true",
+        default=os.environ.get("BENCH_SMOKE") == "1",
+        help="CI-scale configuration (also via BENCH_SMOKE=1)",
+    )
+    run(tiny=ap.parse_args().tiny)

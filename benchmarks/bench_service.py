@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import record
+from benchmarks.common import emit_bench_json, record
 from repro.core import SelfJoinConfig
 from repro.data import exponential_dataset
 from repro.join import QueryService, SimilarityIndex
@@ -33,6 +33,8 @@ def run(tiny: bool = False):
     cfg = SelfJoinConfig(eps=p["eps"], k=4, tile_size=32)
     service = QueryService(SimilarityIndex(d, cfg))
     rng = np.random.default_rng(7)
+    contracts: dict = {}
+    metrics: dict = {}
 
     for nq in p["batches"]:
         q = d[rng.choice(p["n"], size=nq, replace=False)]
@@ -42,6 +44,9 @@ def run(tiny: bool = False):
             res = service.range_count(q, p["eps"])
         dt = (time.perf_counter() - t0) / p["reps"]
         assert res.stats.num_traces == 0, "warm request retraced"
+        metrics[f"range_count_us/nq={nq}"] = dt * 1e6
+        contracts[f"bucket/nq={nq}"] = res.stats.bucket
+        contracts[f"tier/nq={nq}"] = res.stats.execution
         record(
             f"service/range_count/nq={nq}", dt * 1e6,
             f"qps={nq / dt:.0f};bucket={res.stats.bucket};"
@@ -56,6 +61,7 @@ def run(tiny: bool = False):
             res = service.knn(q, p["k"])
         dt = (time.perf_counter() - t0) / p["reps"]
         assert res.stats.num_traces == 0, "warm kNN retraced"
+        metrics[f"knn{p['k']}_us/nq={nq}"] = dt * 1e6
         record(
             f"service/knn{p['k']}/nq={nq}", dt * 1e6,
             f"qps={nq / dt:.0f};eps_rounds={res.stats.eps_rounds};"
@@ -67,6 +73,17 @@ def run(tiny: bool = False):
         "service/stream-contract", float(t.num_traces),
         f"traces={t.num_traces};buckets={sorted(service.buckets_used)};"
         f"requests={t.num_requests};dispatches={t.num_device_dispatches}",
+    )
+    # the compile-reuse contract is exact: warming this fixed stream must
+    # always cost the same trace count over the same bucket set
+    contracts["num_traces"] = t.num_traces
+    contracts["buckets"] = sorted(service.buckets_used)
+    emit_bench_json(
+        "service",
+        contracts=contracts,
+        metrics=metrics,
+        info={"n": p["n"], "dims": p["dims"], "eps": p["eps"],
+              "requests": t.num_requests, "tiny": tiny},
     )
 
 

@@ -9,14 +9,51 @@ roofline analysis (EXPERIMENTS.md #Roofline).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import textwrap
 import time
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# Machine-readable benchmark outputs (consumed by benchmarks/compare.py).
+# Written under BENCH_OUT_DIR -- NOT the repo root -- so a CI smoke run can
+# never clobber the committed baselines in benchmarks/baselines/.
+BENCH_OUT_DIR = os.environ.get("BENCH_OUT_DIR", ".bench_out")
+
+
+def emit_bench_json(
+    name: str,
+    *,
+    contracts: Dict[str, object],
+    metrics: Dict[str, float],
+    info: Dict[str, object] | None = None,
+) -> str:
+    """Write ``BENCH_<name>.json`` for the regression gate; return its path.
+
+    Three sections with three comparison rules (see ``compare.py``):
+    ``contracts`` are deterministic facts (dispatch decisions, trace
+    counts, parity verdicts) diffed EXACTLY; ``metrics`` are wall-time
+    measurements diffed within a slack factor; ``info`` is context
+    (dataset sizes, measured crossover points) recorded but never gated.
+    """
+    out_dir = BENCH_OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "bench": name,
+        "contracts": contracts,
+        "metrics": {k: round(float(v), 1) for k, v in metrics.items()},
+        "info": info or {},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)
+    return path
 
 # Shared fused-vs-host measurement for the distributed engine (used by
 # bench_comm's contract row and bench_scaling's per-|p| rows).  Runs in a

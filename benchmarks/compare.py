@@ -1,0 +1,107 @@
+"""Benchmark regression gate: diff fresh BENCH_*.json against baselines.
+
+``make bench-compare`` runs the tiny-mode benchmarks into ``BENCH_OUT_DIR``
+(default ``.bench_out``) and then this script against the committed
+baselines in ``benchmarks/baselines/``.  Three rules, one per section of
+``common.emit_bench_json``:
+
+- **contracts** diff EXACTLY.  These are deterministic facts -- the cost
+  model's dispatch decisions along the dims sweep, trace counts and bucket
+  sets of a fixed request stream, tier-parity verdicts.  Any drift means
+  behaviour changed, not the machine.
+- **metrics** (wall-time microseconds) gate within a slack factor
+  (default 8x, ``BENCH_COMPARE_FACTOR``): CI boxes are noisy and share
+  cores, so only order-of-magnitude regressions fail; a metric present in
+  the baseline but missing from the fresh run also fails (a benchmark
+  silently dropping rows is itself a regression).
+- **info** is recorded context and never gated.
+
+Exit status is non-zero iff any baseline fails, so CI can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import List
+
+DEFAULT_FACTOR = 8.0
+
+
+def compare_payloads(name: str, base: dict, cur: dict, factor: float) -> List[str]:
+    """Return a list of human-readable failures (empty == pass)."""
+    failures: List[str] = []
+    b_con, c_con = base.get("contracts", {}), cur.get("contracts", {})
+    for key, want in sorted(b_con.items()):
+        if key not in c_con:
+            failures.append(f"{name}: contract {key!r} missing from current run")
+        elif c_con[key] != want:
+            failures.append(
+                f"{name}: contract {key!r} changed: "
+                f"baseline {want!r} -> current {c_con[key]!r}"
+            )
+    b_met, c_met = base.get("metrics", {}), cur.get("metrics", {})
+    for key, want in sorted(b_met.items()):
+        if key not in c_met:
+            failures.append(f"{name}: metric {key!r} missing from current run")
+            continue
+        got = float(c_met[key])
+        # only slower-than-slack fails; faster is never a regression
+        if got > float(want) * factor:
+            failures.append(
+                f"{name}: metric {key!r} regressed: "
+                f"{want:.1f}us -> {got:.1f}us (> {factor:g}x slack)"
+            )
+    return failures
+
+
+def compare_dirs(baseline_dir: str, current_dir: str, factor: float) -> List[str]:
+    failures: List[str] = []
+    baselines = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not baselines:
+        return [f"no BENCH_*.json baselines found in {baseline_dir}"]
+    for bpath in baselines:
+        fname = os.path.basename(bpath)
+        cpath = os.path.join(current_dir, fname)
+        with open(bpath) as f:
+            base = json.load(f)
+        if not os.path.exists(cpath):
+            failures.append(f"{fname}: no fresh result in {current_dir}")
+            continue
+        with open(cpath) as f:
+            cur = json.load(f)
+        failures.extend(compare_payloads(fname, base, cur, factor))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline", default=os.path.join(os.path.dirname(__file__), "baselines"),
+        help="directory of committed BENCH_*.json baselines",
+    )
+    ap.add_argument(
+        "--current", default=os.environ.get("BENCH_OUT_DIR", ".bench_out"),
+        help="directory of freshly produced BENCH_*.json results",
+    )
+    ap.add_argument(
+        "--factor", type=float,
+        default=float(os.environ.get("BENCH_COMPARE_FACTOR", DEFAULT_FACTOR)),
+        help="metric slack factor (contracts are always exact)",
+    )
+    args = ap.parse_args(argv)
+    failures = compare_dirs(args.baseline, args.current, args.factor)
+    if failures:
+        print(f"bench-compare: {len(failures)} regression(s)", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"bench-compare: ok (baselines={args.baseline}, "
+          f"current={args.current}, factor={args.factor:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

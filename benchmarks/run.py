@@ -18,6 +18,7 @@ MODULES = [
     "bench_partition_balance",  # Fig. 10
     "bench_scaling",            # Fig. 11
     "bench_comm",               # Fig. 12
+    "bench_dense",              # hybrid tiers: dense-vs-indexed crossover
     "bench_service",            # serving tier: warm QPS vs batch size
     "bench_speedup_summary",    # Table 3
 ]

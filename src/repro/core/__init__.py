@@ -7,7 +7,13 @@ from repro.core.types import (  # noqa: F401
     SelfJoinStats,
 )
 from repro.core.selfjoin import self_join, self_join_hostloop  # noqa: F401
-from repro.core.engine import SelfJoinEngine  # noqa: F401
+from repro.core.engine import SelfJoinEngine, make_dense_plan  # noqa: F401
+from repro.core.cost import (  # noqa: F401
+    TierDecision,
+    decide,
+    dense_join_cost,
+    indexed_join_cost,
+)
 from repro.core.dist_engine import DistributedSelfJoinEngine  # noqa: F401
 from repro.core.reorder import variance_reorder, estimate_dim_variance  # noqa: F401
 from repro.core.grid import build_grid, build_tile_plan, GridIndex, TilePlan  # noqa: F401

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batching as batching_mod
+from repro.core import cost as cost_mod
 from repro.core.grid import (
     GridIndex,
     QueryTilePlan,
@@ -220,6 +221,53 @@ def _chunk_list(
 
 
 # ---------------------------------------------------------------------------
+# The dense execution tier (DESIGN.md #9).
+# ---------------------------------------------------------------------------
+
+
+def make_dense_plan(n_points: int, tile_size: int) -> TilePlan:
+    """Sequential full-tile plan: the dense tier's work list.
+
+    The indexed tier's tiles follow grid-cell boundaries, so in high
+    dimensions (many near-singleton cells) they are mostly padding and the
+    tile-pair fan-out explodes.  The dense tier re-tiles ``pts_sorted``
+    *sequentially* -- every tile full except the last -- and lists the
+    complete tile cross product.  Same ``TilePlan`` type, same chunk
+    programs downstream; only the pair list and the per-tile layout differ.
+    """
+    t = int(tile_size)
+    num_tiles = -(-int(n_points) // t) if n_points else 0
+    tile_start = np.arange(num_tiles, dtype=np.int64) * t
+    tile_len = np.minimum(int(n_points) - tile_start, t)
+    idx = np.arange(num_tiles, dtype=np.int64)
+    return TilePlan(
+        tile_size=t,
+        tile_start=tile_start.astype(np.int32),
+        tile_len=tile_len.astype(np.int32),
+        tile_cell=np.zeros(num_tiles, np.int32),  # no cells in the dense tier
+        pair_a=np.repeat(idx, num_tiles).astype(np.int32),
+        pair_b=np.tile(idx, num_tiles).astype(np.int32),
+        num_tile_pairs_total=num_tiles * num_tiles,
+        num_candidates=int(n_points) * int(n_points),
+    )
+
+
+@dataclasses.dataclass
+class _DenseTables:
+    """Device-resident dense-tier twin of the engine's indexed tables."""
+
+    plan: TilePlan
+    tiles: jax.Array          # (num_tiles, T, n_pad) f32, sequential layout
+    tile_len: jax.Array       # (num_tiles,) int32
+    tile_start: jax.Array     # (num_tiles,) int32 into pts_sorted
+    _chunk_cache: Dict[int, list] = dataclasses.field(default_factory=dict)
+
+    def chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
+        return _chunk_list(self.plan.pair_a, self.plan.pair_b, chunk,
+                           self._chunk_cache)
+
+
+# ---------------------------------------------------------------------------
 # The bipartite query-plan API (DESIGN.md #8).
 # ---------------------------------------------------------------------------
 
@@ -259,6 +307,10 @@ class QueryPlanTables:
     order: jax.Array               # (n_slots + N,) int32 position -> original id
     pair_a: np.ndarray             # (P,) int32 combined-table A (query-tile) index
     pair_b: np.ndarray             # (P,) int32 combined-table B (data-tile) index
+    execution: str = "indexed"     # tier the tables realize: "indexed" | "dense"
+    cost_indexed: float = 0.0      # cost model's indexed-tier estimate
+    cost_dense: float = 0.0        # cost model's dense-tier estimate
+    num_candidates: int = 0        # point comparisons this tier will evaluate
     _chunk_cache: Dict[int, list] = dataclasses.field(default_factory=dict)
 
     @property
@@ -312,6 +364,7 @@ class SelfJoinEngine:
         self._index_eps: Optional[float] = None
         self.grid: Optional[GridIndex] = None
         self.plan: Optional[TilePlan] = None
+        self._dense: Optional[_DenseTables] = None
         if self.num_points:
             self._build_index(config.eps)
 
@@ -343,6 +396,7 @@ class SelfJoinEngine:
         self._work = pts if self._perm is None else apply_reorder(pts, self._perm)
         self.grid = grid
         self.plan = plan
+        self._dense = None
         self._index_eps = None if index_eps is None else float(index_eps)
         if self.grid is not None:
             self._device_index()
@@ -371,10 +425,51 @@ class SelfJoinEngine:
             dim_block=cfg.dim_block,
         )
         self._chunk_cache: dict = {}
+        self._dense = None  # dense layout follows pts_sorted; rebuild lazily
 
     def _ensure_index(self, eps: float) -> None:
         if self._index_eps is None or eps > self._index_eps:
             self._build_index(eps)
+
+    def _ensure_dense(self) -> _DenseTables:
+        """Build (lazily, once per index build) the dense-tier tables."""
+        if self._dense is None:
+            cfg = self.config
+            plan = make_dense_plan(self.num_points, cfg.tile_size)
+            tiles = ops.make_tiles_device(
+                jnp.asarray(self.grid.pts_sorted),
+                jnp.asarray(plan.tile_start, jnp.int32),
+                jnp.asarray(plan.tile_len, jnp.int32),
+                tile_size=cfg.tile_size,
+                dim_block=cfg.dim_block,
+            )
+            self._dense = _DenseTables(
+                plan=plan,
+                tiles=tiles,
+                tile_len=jnp.asarray(plan.tile_len, jnp.int32),
+                tile_start=jnp.asarray(plan.tile_start, jnp.int32),
+            )
+        return self._dense
+
+    def resolve_execution(self, eps: Optional[float] = None) -> cost_mod.TierDecision:
+        """Cost-model tier decision for a self-join at ``eps`` (DESIGN.md #9).
+
+        Always computes both estimates (even under a forced mode) so stats
+        record what the model thought alongside what actually ran.
+        """
+        eps = self.config.eps if eps is None else float(eps)
+        cfg = self.config
+        if self.num_points == 0:
+            return cost_mod.decide(0.0, 0.0, cfg.execution)
+        self._ensure_index(eps)
+        ci = cost_mod.indexed_join_cost(
+            self.plan.num_pairs, self.plan.num_candidates,
+            cfg.tile_size, self.n_pad,
+        )
+        cd = cost_mod.dense_join_cost(
+            self.num_points, self.num_points, cfg.tile_size, self.n_pad
+        )
+        return cost_mod.decide(ci, cd, cfg.execution)
 
     def _chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
         """Padded device chunks of the candidate pair list, cached."""
@@ -394,7 +489,14 @@ class SelfJoinEngine:
             stats.num_tile_pairs_total = self.plan.num_tile_pairs_total
             stats.num_tile_pairs_evaluated = self.plan.num_pairs
             stats.num_candidates = self.plan.num_candidates
+            stats.num_candidates_dense = self.num_points * self.num_points
         return stats
+
+    @staticmethod
+    def _record_decision(stats: SelfJoinStats, dec: cost_mod.TierDecision) -> None:
+        stats.execution = dec.execution
+        stats.cost_indexed = dec.cost_indexed
+        stats.cost_dense = dec.cost_dense
 
     @property
     def _num_dim_blocks(self) -> int:
@@ -459,12 +561,42 @@ class SelfJoinEngine:
             raise ValueError(
                 f"pad_queries_to={n_slots} smaller than the batch ({nq})"
             )
+        # cost-model tier dispatch (DESIGN.md #9): the indexed estimate comes
+        # from the grid probe that just ran, the dense estimate from the
+        # batch shape alone.  Both tiers share q_sorted / q_order (the dense
+        # tier only re-tiles the already-sorted rows sequentially).
+        dec = cost_mod.decide(
+            cost_mod.indexed_join_cost(
+                qplan.num_pairs, qplan.num_candidates, cfg.tile_size, self.n_pad
+            ),
+            cost_mod.dense_join_cost(
+                nq, self.num_points, cfg.tile_size, self.n_pad
+            ),
+            cfg.execution,
+        )
+        t = cfg.tile_size
         # every cell holds >= 1 point, so num_q_tiles <= nq <= n_slots: one
         # bucket dimension pads the q-sorted rows AND the q-tile rows
-        qt_rows = qplan.num_q_tiles if pad_queries_to is None else n_slots
+        qt_rows = n_slots
+        if pad_queries_to is None:
+            qt_rows = qplan.num_q_tiles if dec.execution == "indexed" else -(-nq // t)
         q_sorted = pad_axis0(qplan.q_sorted, n_slots)
-        q_start = pad_axis0(qplan.q_tile_start, qt_rows)
-        q_len = pad_axis0(qplan.q_tile_len, qt_rows)
+        if dec.execution == "dense":
+            dt = self._ensure_dense()
+            q_start = (np.arange(qt_rows, dtype=np.int64) * t).astype(np.int32)
+            q_len = np.clip(nq - q_start.astype(np.int64), 0, t).astype(np.int32)
+            nqt = -(-nq // t)  # real (non-empty) query tiles
+            pair_a = np.repeat(np.arange(nqt, dtype=np.int64), dt.plan.num_tiles)
+            pair_d = np.tile(np.arange(dt.plan.num_tiles, dtype=np.int64), nqt)
+            d_tiles, d_len, d_start = dt.tiles, dt.tile_len, dt.tile_start
+            num_candidates = nq * self.num_points
+        else:
+            q_start = pad_axis0(qplan.q_tile_start, qt_rows)
+            q_len = pad_axis0(qplan.q_tile_len, qt_rows)
+            pair_a = qplan.pair_q.astype(np.int64)
+            pair_d = qplan.pair_d.astype(np.int64)
+            d_tiles, d_len, d_start = self._tiles, self._tile_len, self._tile_start
+            num_candidates = qplan.num_candidates
         q_tiles = ops.make_tiles_device(
             jnp.asarray(q_sorted),
             jnp.asarray(q_start, jnp.int32),
@@ -472,10 +604,10 @@ class SelfJoinEngine:
             tile_size=cfg.tile_size,
             dim_block=cfg.dim_block,
         )
-        tiles = jnp.concatenate([q_tiles, self._tiles], axis=0)
-        tile_len = jnp.concatenate([jnp.asarray(q_len, jnp.int32), self._tile_len])
+        tiles = jnp.concatenate([q_tiles, d_tiles], axis=0)
+        tile_len = jnp.concatenate([jnp.asarray(q_len, jnp.int32), d_len])
         tile_start = jnp.concatenate(
-            [jnp.asarray(q_start, jnp.int32), self._tile_start + n_slots]
+            [jnp.asarray(q_start, jnp.int32), d_start + n_slots]
         )
         # position -> original id: query rows first (pad rows are never
         # addressed by a valid lane; their fill value is irrelevant), then
@@ -488,7 +620,7 @@ class SelfJoinEngine:
                 self._point_order,
             ]
         )
-        pair_b = (qplan.pair_d.astype(np.int64) + qt_rows).astype(np.int32)
+        pair_b = (pair_d + qt_rows).astype(np.int32)
         return QueryPlanTables(
             eps=eps,
             nq=nq,
@@ -498,8 +630,12 @@ class SelfJoinEngine:
             tile_len=tile_len,
             tile_start=tile_start,
             order=order,
-            pair_a=qplan.pair_q.astype(np.int32),
+            pair_a=pair_a.astype(np.int32),
             pair_b=pair_b,
+            execution=dec.execution,
+            cost_indexed=dec.cost_indexed,
+            cost_dense=dec.cost_dense,
+            num_candidates=num_candidates,
         )
 
     def packed_tile_table(self, num_tiles: int):
@@ -528,6 +664,26 @@ class SelfJoinEngine:
 
     # -- queries ----------------------------------------------------------
 
+    def _self_tables(self, dec: cost_mod.TierDecision):
+        """Device tables of the tier ``dec`` chose, one tuple for both modes.
+
+        Returns ``(tiles, tile_len, tile_start, chunks_fn, plan, backend,
+        shortc)``.  Both tiers address the same grid-sorted point space (the
+        dense tier only re-tiles it), so the scatter epilogues and
+        ``_unsort_counts`` are tier-independent.
+        """
+        cfg = self.config
+        if dec.execution == "dense":
+            dt = self._ensure_dense()
+            return (
+                dt.tiles, dt.tile_len, dt.tile_start, dt.chunks, dt.plan,
+                ops.backend_name("dense", cfg.use_pallas), False,
+            )
+        return (
+            self._tiles, self._tile_len, self._tile_start, self._chunks,
+            self.plan, ops.backend_name("indexed", cfg.use_pallas), cfg.shortc,
+        )
+
     def count(self, eps: Optional[float] = None) -> SelfJoinResult:
         """Per-point neighbour counts (original order); no pair buffer."""
         eps = self.config.eps if eps is None else float(eps)
@@ -537,17 +693,25 @@ class SelfJoinEngine:
             )
         self._ensure_index(eps)
         cfg, eng = self.config, self.engine
+        dec = self.resolve_execution(eps)
+        tiles, tile_len, tile_start, chunks, plan, backend, shortc = (
+            self._self_tables(dec)
+        )
         stats = self._base_stats(eps)
+        self._record_decision(stats, dec)
+        if dec.execution == "dense":
+            stats.num_tile_pairs_evaluated = plan.num_pairs
+            stats.num_candidates = plan.num_candidates
 
         counts_sorted = jnp.zeros(self.num_points, jnp.int32)
         skipped_tot = jnp.zeros((), jnp.int32)
-        for pa, pb, real in self._chunks(eng.count_chunk):
+        for pa, pb, real in chunks(eng.count_chunk):
             counts_sorted, skipped_tot = _count_chunk_program(
                 counts_sorted, skipped_tot,
-                self._tiles, self._tile_len, self._tile_start,
+                tiles, tile_len, tile_start,
                 pa, pb, real, eps,
-                dim_block=cfg.dim_block, shortc=cfg.shortc,
-                backend="pallas" if cfg.use_pallas else "jnp",
+                dim_block=cfg.dim_block, shortc=shortc,
+                backend=backend,
                 interpret=eng.interpret,
             )
             stats.num_chunks += 1
@@ -556,7 +720,7 @@ class SelfJoinEngine:
         ).astype(np.int64)
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
-        stats.dim_blocks_total = self.plan.num_pairs * self._num_dim_blocks
+        stats.dim_blocks_total = plan.num_pairs * self._num_dim_blocks
         return SelfJoinResult(counts=counts, stats=stats)
 
     def count_query(self, q: np.ndarray, eps: Optional[float] = None) -> SelfJoinResult:
@@ -585,9 +749,15 @@ class SelfJoinEngine:
         stats = self._base_stats(eps)
         stats.num_points = nq
         stats.num_tile_pairs_total = qplan.num_tile_pairs_total
-        stats.num_tile_pairs_evaluated = qplan.num_pairs
-        stats.num_candidates = qplan.num_candidates
-        stats.num_tiles = qplan.num_q_tiles + self.plan.num_tiles
+        stats.num_tile_pairs_evaluated = tab.num_pairs
+        stats.num_candidates = tab.num_candidates
+        stats.num_candidates_dense = nq * self.num_points
+        stats.num_tiles = int(tab.tiles.shape[0])
+        stats.execution = tab.execution
+        stats.cost_indexed = tab.cost_indexed
+        stats.cost_dense = tab.cost_dense
+        backend = ops.backend_name(tab.execution, cfg.use_pallas)
+        shortc = cfg.shortc and tab.execution == "indexed"
 
         counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
         skipped_tot = jnp.zeros((), jnp.int32)
@@ -596,8 +766,8 @@ class SelfJoinEngine:
                 counts_sorted, skipped_tot,
                 tab.tiles, tab.tile_len, tab.tile_start,
                 pa, pb, real, eps,
-                dim_block=cfg.dim_block, shortc=cfg.shortc,
-                backend="pallas" if cfg.use_pallas else "jnp",
+                dim_block=cfg.dim_block, shortc=shortc,
+                backend=backend,
                 interpret=eng.interpret,
             )
             stats.num_chunks += 1
@@ -606,7 +776,7 @@ class SelfJoinEngine:
         ).astype(np.int64)
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
-        stats.dim_blocks_total = qplan.num_pairs * self._num_dim_blocks
+        stats.dim_blocks_total = tab.num_pairs * self._num_dim_blocks
         return SelfJoinResult(counts=counts, stats=stats)
 
     def pairs(
@@ -633,7 +803,10 @@ class SelfJoinEngine:
             )
         self._ensure_index(eps)
         cfg, eng = self.config, self.engine
-        backend = "pallas" if cfg.use_pallas else "jnp"
+        dec = self.resolve_execution(eps)
+        tiles, tile_len, tile_start, chunks, plan, backend, _ = (
+            self._self_tables(dec)
+        )
 
         explicit = max_pairs if max_pairs is not None else eng.max_pairs
         auto = explicit is None
@@ -642,7 +815,7 @@ class SelfJoinEngine:
         elif _cap_hint is not None:
             cap = int(_cap_hint)
         else:
-            cap = self._auto_capacity(eps, backend)
+            cap = self._auto_capacity(eps, dec)
         t = cfg.tile_size
         flat_per_chunk = eng.pairs_chunk * t * t
         hit_cap = min(flat_per_chunk, 4096)
@@ -650,13 +823,17 @@ class SelfJoinEngine:
         retries = 0
         while True:
             stats = self._base_stats(eps)
+            self._record_decision(stats, dec)
+            if dec.execution == "dense":
+                stats.num_tile_pairs_evaluated = plan.num_pairs
+                stats.num_candidates = plan.num_candidates
             buf = jnp.zeros((cap + hit_cap, 2), jnp.int32)
             offset = jnp.zeros((), jnp.int32)
             max_hits = jnp.zeros((), jnp.int32)
-            for pa, pb, real in self._chunks(eng.pairs_chunk):
+            for pa, pb, real in chunks(eng.pairs_chunk):
                 buf, offset, max_hits = _pairs_chunk_program(
                     buf, offset, max_hits,
-                    self._tiles, self._tile_len, self._tile_start,
+                    tiles, tile_len, tile_start,
                     self._point_order, pa, pb, real, eps,
                     hit_cap=hit_cap, dim_block=cfg.dim_block,
                     backend=backend, interpret=eng.interpret,
@@ -688,16 +865,22 @@ class SelfJoinEngine:
             )
         ).astype(np.int64)
         stats.num_results = int(counts.sum())
-        stats.dim_blocks_total = self.plan.num_pairs * self._num_dim_blocks
+        stats.dim_blocks_total = plan.num_pairs * self._num_dim_blocks
         stats.pairs_capacity = cap
         stats.overflow_retries = retries
         return SelfJoinResult(counts=counts, stats=stats, pairs=pairs)
 
-    def _auto_capacity(self, eps: float, backend: str) -> int:
-        """Auto-mode pairs-buffer capacity from the paper's |R| estimate."""
+    def _auto_capacity(self, eps: float, dec: cost_mod.TierDecision) -> int:
+        """Auto-mode pairs-buffer capacity from the paper's |R| estimate.
+
+        The estimate samples the *chosen* tier's candidate pair list with
+        the chosen backend, so the capacity reflects the tables that will
+        actually run.
+        """
         cfg, eng = self.config, self.engine
+        tiles, tile_len, _, _, plan, backend, _ = self._self_tables(dec)
         est = batching_mod.estimate_result_size(
-            self._tiles, self._tile_len, self.plan, eps=eps,
+            tiles, tile_len, plan, eps=eps,
             dim_block=cfg.dim_block, backend=backend,
             sample_frac=cfg.sample_frac, interpret=eng.interpret,
         )
@@ -724,8 +907,8 @@ class SelfJoinEngine:
             cap_hint = None
             explicit = max_pairs if max_pairs is not None else self.engine.max_pairs
             if explicit is None and eps_list and self.num_points:
-                backend = "pallas" if self.config.use_pallas else "jnp"
-                cap_hint = self._auto_capacity(max(eps_list), backend)
+                dec = self.resolve_execution(max(eps_list))
+                cap_hint = self._auto_capacity(max(eps_list), dec)
             return [
                 self.pairs(e, max_pairs=max_pairs, _cap_hint=cap_hint)
                 for e in eps_list

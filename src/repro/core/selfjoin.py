@@ -14,10 +14,16 @@ Pipeline (paper lines 1-10, adapted per DESIGN.md #1):
 
 ``self_join`` is a thin wrapper over the device-resident
 ``repro.core.engine.SelfJoinEngine``, which keeps steps 4-6 on the
-accelerator (DESIGN.md #1.5).  The original host-loop implementation is
-preserved as ``self_join_hostloop`` -- it is the baseline that
+accelerator (DESIGN.md #1.5).  ``config.execution`` selects the execution
+tier (DESIGN.md #9): ``"indexed"`` runs the pipeline above; ``"dense"``
+skips index filtering and evaluates the full tile cross product with the
+clamped matmul-identity kernel (``kernels/dense_tile.py``); ``"auto"``
+compares the cost model's two estimates (``repro.core.cost``) and picks the
+cheaper tier -- the decision and both estimates are recorded in
+``SelfJoinStats``.  The original host-loop implementation is preserved as
+``self_join_hostloop`` -- it is the baseline that
 ``benchmarks/bench_engine.py`` measures the engine against, and a second
-oracle for parity tests.
+oracle for parity tests; it is indexed-tier only.
 """
 from __future__ import annotations
 

@@ -32,12 +32,19 @@ class SelfJoinConfig:
     batch_size: int = 10**8      # b_s, result pairs per batch (paper Sec. 3.2.2)
     min_batches: int = 3         # n_b >= 3 (paper: >= 3 CUDA streams)
     use_pallas: bool = False     # evaluate tiles with the Pallas kernel (interpret on CPU)
+    execution: str = "indexed"   # "indexed" | "dense" | "auto" tier dispatch;
+                                 # "auto" picks by cost model (DESIGN.md #9)
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
         if self.eps < 0:
             raise ValueError(f"eps must be >= 0, got {self.eps}")
+        if self.execution not in ("auto", "indexed", "dense"):
+            raise ValueError(
+                f"execution must be 'auto', 'indexed' or 'dense', "
+                f"got {self.execution!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +96,9 @@ class SelfJoinStats:
                                          # per join (fused ring: exactly 1)
     num_candidates_dense: int = 0        # |Q| x |E| sum a dense ring pass would do
     comm_elements: int = 0               # ring transport volume, (|p|-1)|D| points
+    execution: str = ""                  # tier that ran: "indexed" | "dense"
+    cost_indexed: float = 0.0            # cost model's indexed-tier estimate
+    cost_dense: float = 0.0              # cost model's dense-tier estimate
 
     @property
     def candidate_filter_ratio(self) -> float:

@@ -12,6 +12,11 @@ arrays, tile plan) next to the dataset in one ``.npz``, so a server process
 can restart without re-running REORDER or the grid build and the restarted
 index serves queries bit-identically to the one that was saved
 (``SelfJoinEngine.from_prebuilt`` only re-places the arrays on device).
+The full ``SelfJoinConfig`` -- including the ``execution`` tier-dispatch
+mode (DESIGN.md #9) -- round-trips through the JSON metadata, so a
+restarted server makes the same dense/indexed dispatch decisions as the
+one that was saved; the dense tier's tables are derived (re-tiled from the
+persisted ``pts_sorted``) and need no arrays of their own.
 """
 from __future__ import annotations
 

@@ -19,6 +19,15 @@ bucket.  ``ServiceStats.num_traces`` reports it per request and
 ``QueryService.total`` accumulates it across the stream -- the serving
 analogue of the fused ring's ``fused_traces == 1`` contract.
 
+Execution tiers (DESIGN.md #9): every request batch flows through the
+engine's cost-model dispatch (``SelfJoinConfig.execution``), so a
+high-dimensional stream where the grid has lost its filtering power is
+served by the dense matmul tier.  The tier is part of each executable's
+static trace key (``backend``/``shortc``), so a mixed stream straddling the
+dispatch boundary compiles at most one count and one pairs executable per
+shape bucket *per tier*; ``ServiceStats`` records the tier served and the
+cost model's two estimates.
+
 kNN tie-breaking is deterministic: neighbours sort by (distance, data id),
 and queries with fewer than k reachable neighbours (k >= |D|) pad with
 id -1 / distance +inf.  The eps expansion is capped at the diagonal of the
@@ -40,6 +49,7 @@ from repro.core.engine import (
     pairs_chunk_step,
 )
 from repro.join.index import SimilarityIndex
+from repro.kernels import ops
 
 _MAX_HITCAP_RETRIES = 8
 
@@ -55,9 +65,21 @@ class ServiceStats:
     eps_rounds: int = 0          # kNN eps-expansion count passes (1 = no growth)
     num_traces: int = 0          # NEW chunk-program traces this request caused
     num_device_dispatches: int = 0  # chunk-program launches
-    num_candidates: int = 0      # index-filtered point comparisons
+    num_candidates: int = 0      # point comparisons the chosen tier evaluated
     num_results: int = 0         # neighbours counted / pairs returned
     index_rebuilds: int = 0      # grid rebuilds forced by eps above the index radius
+    execution: str = ""          # tier that served this request ("mixed" across
+                                 # requests/eps rounds that disagree)
+    cost_indexed: float = 0.0    # summed cost-model indexed-tier estimates
+    cost_dense: float = 0.0      # summed cost-model dense-tier estimates
+
+    def record_tier(self, execution: str, ci: float, cd: float) -> None:
+        if self.execution and self.execution != execution:
+            self.execution = "mixed"
+        else:
+            self.execution = execution
+        self.cost_indexed += ci
+        self.cost_dense += cd
 
     def accumulate(self, other: "ServiceStats") -> None:
         self.num_requests += other.num_requests
@@ -70,6 +92,10 @@ class ServiceStats:
         self.num_candidates += other.num_candidates
         self.num_results += other.num_results
         self.index_rebuilds += other.index_rebuilds
+        if other.execution:
+            self.record_tier(
+                other.execution, other.cost_indexed, other.cost_dense
+            )
 
 
 @dataclasses.dataclass
@@ -118,24 +144,30 @@ class QueryService:
         eng = index.engine.engine
         self._count_chunk = eng.count_chunk
         self._pairs_chunk = eng.pairs_chunk
-        backend = "pallas" if cfg.use_pallas else "jnp"
 
         # The service's two executables, jitted once per service instance.
         # The bodies run ONLY when XLA traces a new (bucket) shape, so the
         # counter increments measure exactly the compile-reuse contract.
-        def _count_step(counts, tiles, tile_len, tile_start, pa, pb, real, eps):
+        # ``backend``/``shortc`` are static: a stream that straddles the
+        # dense/indexed dispatch boundary compiles at most one executable
+        # per shape bucket PER TIER (the tile-table shapes differ between
+        # tiers anyway, so the tier is already part of the trace key).
+        def _count_step(
+            counts, tiles, tile_len, tile_start, pa, pb, real, eps,
+            *, backend, shortc,
+        ):
             self._trace_count += 1
             counts, _ = count_chunk_step(
                 counts, jnp.zeros((), jnp.int32),
                 tiles, tile_len, tile_start, pa, pb, real, eps,
-                dim_block=cfg.dim_block, shortc=cfg.shortc,
+                dim_block=cfg.dim_block, shortc=shortc,
                 backend=backend, interpret=eng.interpret,
             )
             return counts
 
         def _pairs_step(
             buf, offset, max_hits, tiles, tile_len, tile_start, order,
-            pa, pb, real, eps, *, hit_cap,
+            pa, pb, real, eps, *, hit_cap, backend,
         ):
             self._trace_count += 1
             return pairs_chunk_step(
@@ -145,8 +177,12 @@ class QueryService:
                 backend=backend, interpret=eng.interpret,
             )
 
-        self._count_step = jax.jit(_count_step)
-        self._pairs_step = jax.jit(_pairs_step, static_argnames=("hit_cap",))
+        self._count_step = jax.jit(
+            _count_step, static_argnames=("backend", "shortc")
+        )
+        self._pairs_step = jax.jit(
+            _pairs_step, static_argnames=("hit_cap", "backend")
+        )
 
     # -- bucketing ---------------------------------------------------------
 
@@ -166,19 +202,29 @@ class QueryService:
             stats.index_rebuilds += 1
         stats.bucket = bucket
         self.buckets_used.add(bucket)
+        if tab is not None:
+            stats.record_tier(tab.execution, tab.cost_indexed, tab.cost_dense)
         return tab
+
+    def _tier_kwargs(self, tab: QueryPlanTables) -> dict:
+        cfg = self.index.config
+        return {
+            "backend": ops.backend_name(tab.execution, cfg.use_pallas),
+            "shortc": cfg.shortc and tab.execution == "indexed",
+        }
 
     def _run_counts(
         self, tab: QueryPlanTables, eps: float, stats: ServiceStats
     ) -> np.ndarray:
+        tier = self._tier_kwargs(tab)
         counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
         for pa, pb, real in tab.chunks(self._count_chunk):
             counts_sorted = self._count_step(
                 counts_sorted, tab.tiles, tab.tile_len, tab.tile_start,
-                pa, pb, real, jnp.float32(eps),
+                pa, pb, real, jnp.float32(eps), **tier,
             )
             stats.num_device_dispatches += 1
-        stats.num_candidates += tab.qplan.num_candidates
+        stats.num_candidates += tab.num_candidates
         cs = np.asarray(counts_sorted)
         counts = np.zeros(tab.nq, np.int64)
         counts[tab.qplan.q_order] = cs[: tab.nq]
@@ -189,6 +235,7 @@ class QueryService:
     ) -> np.ndarray:
         """One pairs pass sized exactly from the known count total."""
         t = int(self.index.config.tile_size)
+        backend = self._tier_kwargs(tab)["backend"]
         flat_per_chunk = self._pairs_chunk * t * t
         hit_cap = min(flat_per_chunk, 4096)
         cap = 1 << (max(int(total), 1) - 1).bit_length()  # pow2: bounded trace keys
@@ -201,6 +248,7 @@ class QueryService:
                     buf, offset, max_hits,
                     tab.tiles, tab.tile_len, tab.tile_start, tab.order,
                     pa, pb, real, jnp.float32(eps), hit_cap=hit_cap,
+                    backend=backend,
                 )
                 stats.num_device_dispatches += 1
             if int(max_hits) <= hit_cap:

@@ -1,12 +1,21 @@
 """Jitted wrappers around the tile-distance evaluation.
 
-Two interchangeable backends with one contract:
+Four interchangeable backends with one contract (two per execution tier,
+DESIGN.md #9):
 
-  * ``backend="pallas"`` -- the TPU kernel (``distance_tile.py``), run in
-    interpret mode on CPU; the deployment path on real TPUs.
-  * ``backend="jnp"``    -- a vectorized jnp implementation of the same
+  * ``backend="pallas"``    -- the indexed-tier TPU kernel
+    (``distance_tile.py``, SHORTC dimension-blocked), run in interpret mode
+    on CPU; the deployment path on real TPUs.
+  * ``backend="jnp"``       -- a vectorized jnp implementation of the same
     blocked algorithm (used for CPU-speed benchmarking and as the XLA
     fallback).
+  * ``backend="dense"``     -- the dense-tier TPU kernel (``dense_tile.py``):
+    no SHORTC branching, squared distances by the clamped matmul identity
+    ``max(|a|^2 + |b|^2 - 2 a.b^T, 0)`` (``ref.matmul_sqdist``).
+  * ``backend="dense_jnp"`` -- the XLA twin of the dense kernel.
+
+``backend_name(tier, use_pallas)`` maps an execution tier to its backend
+string; the dense backends ignore ``shortc`` and report 0 skipped blocks.
 
 Compilation-caching contract (DESIGN.md #1.5): the candidate pair list is
 evaluated in fixed-size, zero-padded chunks, and ``eps`` is always a traced
@@ -31,7 +40,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import distance_tile
+from repro.kernels import dense_tile, distance_tile
+from repro.kernels import ref as ref_mod
+
+BACKENDS = ("pallas", "jnp", "dense", "dense_jnp")
+
+
+def backend_name(execution: str, use_pallas: bool) -> str:
+    """Backend string for an execution tier (``"indexed"`` | ``"dense"``)."""
+    if execution == "dense":
+        return "dense" if use_pallas else "dense_jnp"
+    return "pallas" if use_pallas else "jnp"
 
 
 def make_tiles(
@@ -123,10 +142,45 @@ def eval_tile_pairs(
         if not shortc:  # kernel always short-circuits; zero the stat
             skipped = jnp.zeros_like(skipped)
         return (counts, skipped, res[2]) if return_mask else (counts, skipped)
+    if backend == "dense":  # dense tier: no SHORTC, `shortc` is ignored
+        res = dense_tile.dense_tile_distance(
+            tiles_pts, tile_len, pair_a, pair_b,
+            eps=eps, dim_block=dim_block, interpret=interpret,
+            return_mask=return_mask,
+        )
+        counts = res[0]
+        skipped = jnp.zeros((pair_a.shape[0],), jnp.int32)
+        return (counts, skipped, res[1]) if return_mask else (counts, skipped)
+    if backend == "dense_jnp":
+        return _eval_dense_jnp(
+            tiles_pts, tile_len, pair_a, pair_b, eps, return_mask=return_mask
+        )
+    if backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     return _eval_jnp(
         tiles_pts, tile_len, pair_a, pair_b, eps,
         dim_block=dim_block, shortc=shortc, return_mask=return_mask,
     )
+
+
+def _eval_dense_jnp(tiles_pts, tile_len, pair_a, pair_b, eps, *, return_mask):
+    """XLA twin of the dense kernel: clamped matmul identity, no blocking."""
+    t = tiles_pts.shape[1]
+    a = tiles_pts[pair_a]                      # (P, T, n_pad)
+    b = tiles_pts[pair_b]
+    d2 = ref_mod.matmul_sqdist(a, b)           # (P, T, T), clamped at 0
+    la = tile_len[pair_a]
+    lb = tile_len[pair_b]
+    rows = jnp.arange(t, dtype=jnp.int32)
+    valid = (rows[None, :, None] < la[:, None, None]) & (
+        rows[None, None, :] < lb[:, None, None]
+    )
+    within = (d2 <= jnp.asarray(eps, jnp.float32) ** 2) & valid
+    counts = within.sum(axis=2, dtype=jnp.int32)
+    skipped = jnp.zeros((pair_a.shape[0],), jnp.int32)
+    if return_mask:
+        return counts, skipped, within.astype(jnp.int8)
+    return counts, skipped
 
 
 def _eval_jnp(

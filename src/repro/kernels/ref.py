@@ -11,6 +11,34 @@ import jax
 import jax.numpy as jnp
 
 
+def matmul_sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Clamped matmul-form squared distances (the dense tier's identity).
+
+    ``a``: (..., Ta, n), ``b``: (..., Tb, n) -> (..., Ta, Tb) float32 with
+    ``d2 = max(|a|^2 + |b|^2 - 2 a.b^T, 0)``.  The clamp is load-bearing on
+    arbitrary fp32 data: rounding of the three-term form can dip a true-zero
+    distance slightly negative, which would silently survive an ``<= eps^2``
+    test but corrupt any downstream sqrt.  On 1/64-quantized coordinates the
+    form is exact and the clamp is a no-op (DESIGN.md #6).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    na = jnp.sum(a * a, axis=-1)[..., :, None]
+    nb = jnp.sum(b * b, axis=-1)[..., None, :]
+    prod = jnp.einsum("...in,...jn->...ij", a, b)
+    return jnp.maximum(na + nb - 2.0 * prod, 0.0)
+
+
+def direct_sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Direct-form squared distances ``|a - b|^2``, (..., Ta, Tb) float32.
+
+    The numerically independent oracle for ``matmul_sqdist`` (different
+    rounding path; never negative by construction).
+    """
+    diff = a.astype(jnp.float32)[..., :, None, :] - b.astype(jnp.float32)[..., None, :, :]
+    return jnp.einsum("...ijn,...ijn->...ij", diff, diff)
+
+
 def ref_tile_counts(
     tiles_pts: jax.Array,   # (num_tiles, T, n) float32, zero-padded
     tile_len: jax.Array,    # (num_tiles,) int32

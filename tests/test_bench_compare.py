@@ -1,0 +1,124 @@
+"""The benchmark regression gate (``benchmarks/compare.py``).
+
+The gate is itself part of the execution-tier lockdown (DESIGN.md #9): a
+contract drift (the cost model flipping a dispatch decision, a trace-count
+change) or an order-of-magnitude wall-time regression must turn CI red.
+These tests inject exactly those defects into synthetic BENCH_*.json pairs
+and require a non-zero exit -- including through the real script entry
+point, which is what ``make bench-compare`` gates on.
+"""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import compare  # noqa: E402
+
+BASE = {
+    "bench": "dense",
+    "contracts": {"auto_tier/dims=2": "indexed", "parity": "ok"},
+    "metrics": {"dense_us/dims=2": 100.0, "indexed_us/dims=2": 200.0},
+    "info": {"tiny": True},
+}
+
+
+def _write(d, payload):
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "BENCH_dense.json"), "w") as f:
+        json.dump(payload, f)
+
+
+def _dirs(tmp_path, current_payload):
+    b, c = str(tmp_path / "baseline"), str(tmp_path / "current")
+    _write(b, BASE)
+    _write(c, current_payload)
+    return b, c
+
+
+def test_identical_payloads_pass(tmp_path):
+    b, c = _dirs(tmp_path, BASE)
+    assert compare.compare_dirs(b, c, 8.0) == []
+    assert compare.main(["--baseline", b, "--current", c]) == 0
+
+
+def test_faster_metrics_and_extra_keys_pass(tmp_path):
+    cur = copy.deepcopy(BASE)
+    cur["metrics"]["dense_us/dims=2"] = 1.0          # faster: never a failure
+    cur["metrics"]["new_us/dims=4"] = 9e9            # new rows: not gated yet
+    cur["contracts"]["auto_tier/dims=4"] = "dense"
+    b, c = _dirs(tmp_path, cur)
+    assert compare.compare_dirs(b, c, 8.0) == []
+
+
+def test_injected_walltime_regression_fails(tmp_path):
+    cur = copy.deepcopy(BASE)
+    cur["metrics"]["dense_us/dims=2"] = 100.0 * 20   # > 8x slack
+    b, c = _dirs(tmp_path, cur)
+    failures = compare.compare_dirs(b, c, 8.0)
+    assert len(failures) == 1 and "regressed" in failures[0]
+    # within a looser slack the same numbers pass
+    assert compare.compare_dirs(b, c, 25.0) == []
+    assert compare.main(["--baseline", b, "--current", c]) == 1
+
+
+def test_contract_drift_fails_regardless_of_slack(tmp_path):
+    cur = copy.deepcopy(BASE)
+    cur["contracts"]["auto_tier/dims=2"] = "dense"   # dispatch flipped
+    b, c = _dirs(tmp_path, cur)
+    failures = compare.compare_dirs(b, c, 1e9)
+    assert len(failures) == 1 and "changed" in failures[0]
+
+
+def test_missing_rows_and_missing_files_fail(tmp_path):
+    cur = copy.deepcopy(BASE)
+    del cur["metrics"]["indexed_us/dims=2"]
+    del cur["contracts"]["parity"]
+    b, c = _dirs(tmp_path, cur)
+    failures = compare.compare_dirs(b, c, 8.0)
+    assert len(failures) == 2 and all("missing" in f for f in failures)
+    # a baseline with no fresh counterpart at all is a failure too
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    assert any("no fresh result" in f for f in compare.compare_dirs(b, empty, 8.0))
+    # and a baseline dir with no baselines means the gate is miswired
+    assert compare.compare_dirs(empty, c, 8.0) != []
+
+
+@pytest.mark.parametrize("inject", [False, True])
+def test_script_exit_status_end_to_end(tmp_path, inject):
+    """`make bench-compare`'s actual gate: the script's process exit code."""
+    cur = copy.deepcopy(BASE)
+    if inject:
+        cur["metrics"]["indexed_us/dims=2"] = 200.0 * 50
+    b, c = _dirs(tmp_path, cur)
+    script = os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "compare.py"
+    )
+    out = subprocess.run(
+        [sys.executable, script, "--baseline", b, "--current", c],
+        capture_output=True, text=True,
+    )
+    assert (out.returncode != 0) == inject, out.stderr
+    if inject:
+        assert "regressed" in out.stderr
+
+
+def test_committed_baselines_are_loadable():
+    """The repo's own baselines parse and carry the crossover contract."""
+    bdir = os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "baselines"
+    )
+    with open(os.path.join(bdir, "BENCH_dense.json")) as f:
+        dense = json.load(f)
+    assert dense["contracts"]["parity"] == "ok"
+    tiers = [v for k, v in dense["contracts"].items()
+             if k.startswith("auto_tier/")]
+    assert "dense" in tiers and "indexed" in tiers  # a real crossover
+    assert dense["info"]["auto_crossover_dims"] is not None
+    with open(os.path.join(bdir, "BENCH_service.json")) as f:
+        service = json.load(f)
+    assert service["contracts"]["num_traces"] > 0

@@ -1,0 +1,238 @@
+"""Hybrid dense/indexed execution (DESIGN.md #9): forced-tier differential
+matrix plus the cost-model dispatch contract.
+
+The lockdown strategy: for every dataset kind in the shared matrix, the
+dense tier, the indexed tier and the float64 oracles must agree EXACTLY on
+counts, pairs, and kNN (coordinates are 1/64-quantized, so both distance
+formulations -- direct and clamped matmul identity -- are exact and results
+compare with ``==``).  ``execution="auto"`` must then pick exactly the tier
+its own recorded cost estimates say is cheaper, on the self-join and the
+serving paths alike.  The whole file runs identically under
+``REPRO_TEST_DEVICES=8`` (CI's multi-device leg), where the distributed
+differential case exercises per-shard dispatch on 8 simulated devices.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from oracles import (
+    bipartite_counts,
+    brute_counts,
+    brute_topk,
+    make_dataset,
+    pair_set,
+)
+from repro.core import (
+    DistributedSelfJoinEngine,
+    SelfJoinConfig,
+    SelfJoinEngine,
+    decide,
+    dense_join_cost,
+    indexed_join_cost,
+    make_dense_plan,
+)
+from repro.join import QueryService, SimilarityIndex
+
+MODES = ("indexed", "dense", "auto")
+
+
+def _cfg(eps, **kw):
+    kw.setdefault("k", 6)
+    kw.setdefault("tile_size", 16)
+    kw.setdefault("dim_block", 8)
+    return SelfJoinConfig(eps=eps, **kw)
+
+
+def _queries(d, seed, n_extra=20):
+    extra = make_dataset("uniform", n_extra, d.shape[1], seed=seed)
+    return np.concatenate([d[: min(33, len(d))], extra])
+
+
+# -- cost model unit behaviour ------------------------------------------------
+
+
+def test_cost_model_arithmetic():
+    # dense: ceil(100/16) * ceil(100/16) * 16*16*8 lane ops + 100*100 epilogue
+    assert dense_join_cost(100, 100, 16, 8) == 7 * 7 * 16 * 16 * 8 + 100 * 100
+    assert dense_join_cost(0, 50, 16, 8) == 0.0
+    # indexed: pairs * T^2 * n_pad + candidates epilogue
+    assert indexed_join_cost(10, 500, 16, 8) == 10 * 16 * 16 * 8 + 500
+
+
+def test_decide_modes_and_ties():
+    assert decide(10.0, 5.0).execution == "dense"
+    assert decide(5.0, 10.0).execution == "indexed"
+    assert decide(7.0, 7.0).execution == "indexed"  # ties -> the paper's path
+    for forced in ("indexed", "dense"):
+        dec = decide(1.0, 2.0, forced)
+        assert dec.execution == forced and dec.forced
+        # forced decisions still carry both estimates for the stats record
+        assert (dec.cost_indexed, dec.cost_dense) == (1.0, 2.0)
+    with pytest.raises(ValueError):
+        decide(1.0, 2.0, "gpu")
+
+
+def test_execution_config_validates():
+    with pytest.raises(ValueError):
+        SelfJoinConfig(eps=0.1, execution="fast")
+    assert SelfJoinConfig(eps=0.1).execution == "indexed"
+
+
+def test_dense_plan_covers_all_points_in_full_tiles():
+    plan = make_dense_plan(37, 8)
+    assert plan.num_tiles == 5
+    assert plan.tile_len.tolist() == [8, 8, 8, 8, 5]
+    assert plan.num_pairs == 25 and plan.num_tile_pairs_total == 25
+    assert plan.num_candidates == 37 * 37
+    # tiles partition [0, 37) exactly once
+    covered = np.zeros(37, bool)
+    for s, l in zip(plan.tile_start, plan.tile_len):
+        assert not covered[s : s + l].any()
+        covered[s : s + l] = True
+    assert covered.all()
+    empty = make_dense_plan(0, 8)
+    assert empty.num_tiles == 0 and empty.num_pairs == 0
+
+
+# -- the forced-tier differential matrix -------------------------------------
+
+
+def test_forced_tier_counts_and_pairs_match_oracles(dataset_case):
+    name, d, eps = dataset_case
+    want_counts = brute_counts(d, eps)
+    results = {}
+    for mode in MODES:
+        eng = SelfJoinEngine(d, _cfg(eps, execution=mode))
+        rc = eng.count()
+        rp = eng.pairs()
+        np.testing.assert_array_equal(rc.counts, want_counts)
+        np.testing.assert_array_equal(rp.counts, want_counts)
+        assert rc.stats.execution in ("indexed", "dense")
+        if mode != "auto":
+            assert rc.stats.execution == mode
+        results[mode] = pair_set(rp.pairs)
+    assert results["indexed"] == results["dense"] == results["auto"]
+
+
+def test_forced_tier_bipartite_and_knn_match_oracles(dataset_case):
+    name, d, eps = dataset_case
+    q = _queries(d, seed=71)
+    want_counts = bipartite_counts(q, d, eps)
+    want_idx, want_dist = brute_topk(q, d, 4)
+    for mode in MODES:
+        idx = SimilarityIndex(d, _cfg(eps, execution=mode))
+        rq = idx.engine.count_query(q, eps)
+        np.testing.assert_array_equal(rq.counts, want_counts)
+        if mode != "auto":
+            assert rq.stats.execution == mode
+        svc = QueryService(idx)
+        np.testing.assert_array_equal(
+            svc.range_count(q, eps).counts, want_counts
+        )
+        kn = svc.knn(q, 4)
+        np.testing.assert_array_equal(kn.indices, want_idx)
+        np.testing.assert_array_equal(kn.distances, want_dist)
+
+
+def test_forced_tier_distributed_parity(dataset_case):
+    """Per-shard dispatch: the distributed tier agrees across forced modes.
+
+    Under ``REPRO_TEST_DEVICES=8`` this runs on 8 simulated devices (the
+    host-driven distributed engine's worker count follows the shard count,
+    not the device count, so the case is meaningful on both CI legs).
+    """
+    name, d, eps = dataset_case
+    want = brute_counts(d, eps)
+    for mode in MODES:
+        de = DistributedSelfJoinEngine(
+            d, _cfg(eps, execution=mode), num_workers=4
+        )
+        np.testing.assert_array_equal(de.count().counts, want)
+
+
+# -- the auto-dispatch contract ----------------------------------------------
+
+
+def test_auto_dispatch_matches_recorded_costs(dataset_case):
+    name, d, eps = dataset_case
+    eng = SelfJoinEngine(d, _cfg(eps, execution="auto"))
+    stats = eng.count().stats
+    assert stats.cost_indexed > 0 and stats.cost_dense > 0
+    want_tier = "dense" if stats.cost_dense < stats.cost_indexed else "indexed"
+    assert stats.execution == want_tier
+    # pairs mode makes the same decision from the same index
+    assert eng.pairs().stats.execution == want_tier
+    # and the decision is reproducible from the public cost API
+    dec = eng.resolve_execution(eps)
+    assert (dec.execution, dec.cost_indexed, dec.cost_dense) == (
+        stats.execution, stats.cost_indexed, stats.cost_dense,
+    )
+
+
+def test_auto_picks_dense_on_high_dimensional_case():
+    """The grid loses filtering power in high dims (ratio -> 1): the model
+    must route at least the 32-dim matrix case to the dense tier, and the
+    decision must be recorded in the join stats."""
+    d = make_dataset("clustered", 403, 32, seed=22)  # == clustered32 case
+    eng = SelfJoinEngine(d, _cfg(0.25, execution="auto"))
+    res = eng.count()
+    assert res.stats.execution == "dense"
+    assert res.stats.cost_dense < res.stats.cost_indexed
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.25))
+
+
+def test_auto_picks_indexed_when_filtering_wins():
+    """A compact low-dim case keeps the indexed tier (ties go there too)."""
+    d = make_dataset("duplicated", 151, 6, seed=24)  # == duplicated6 case
+    eng = SelfJoinEngine(d, _cfg(0.1, execution="auto"))
+    res = eng.count()
+    assert res.stats.execution == "indexed"
+    assert res.stats.cost_indexed <= res.stats.cost_dense
+    np.testing.assert_array_equal(res.counts, brute_counts(d, 0.1))
+
+
+def test_bipartite_auto_decision_recorded_in_tables():
+    d = make_dataset("exponential", 301, 16, seed=72)
+    idx = SimilarityIndex(d, _cfg(0.06, execution="auto"))
+    q = _queries(d, seed=73)
+    tab = idx.prepare_query(q, 0.06)
+    want = "dense" if tab.cost_dense < tab.cost_indexed else "indexed"
+    assert tab.execution == want
+    stats = idx.engine.count_query(q, 0.06).stats
+    assert stats.execution == tab.execution
+    assert (stats.cost_indexed, stats.cost_dense) == (
+        tab.cost_indexed, tab.cost_dense,
+    )
+
+
+# -- the dense Pallas kernel itself ------------------------------------------
+
+
+def test_dense_pallas_kernel_matches_jnp_twin():
+    """The Pallas dense kernel (interpret mode) == its XLA twin == oracle,
+    through the engine end to end (small chunks keep interpret mode fast)."""
+    from repro.core.types import EngineConfig
+
+    d = make_dataset("exponential", 101, 12, seed=74)
+    eng_cfg = EngineConfig(count_chunk=32, pairs_chunk=16)
+    base = _cfg(0.08, tile_size=8, execution="dense")
+    jnp_eng = SelfJoinEngine(d, base, eng_cfg)
+    pal_eng = SelfJoinEngine(
+        d, dataclasses.replace(base, use_pallas=True), eng_cfg
+    )
+    want = brute_counts(d, 0.08)
+    np.testing.assert_array_equal(jnp_eng.count().counts, want)
+    np.testing.assert_array_equal(pal_eng.count().counts, want)
+    assert pair_set(pal_eng.pairs().pairs) == pair_set(jnp_eng.pairs().pairs)
+
+
+def test_dense_tier_eps_zero_duplicate_join():
+    """eps == 0 through the clamped matmul identity: exact-duplicate and
+    self matches survive (quantized coords make the identity exact)."""
+    d = make_dataset("duplicated", 90, 6, seed=75)
+    for mode in ("dense", "auto"):
+        res = SelfJoinEngine(d, _cfg(0.0, execution=mode)).count()
+        np.testing.assert_array_equal(res.counts, brute_counts(d, 0.0))
+        assert (res.counts >= 1).all()
+        assert res.counts.max() >= 3

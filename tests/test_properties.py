@@ -15,6 +15,7 @@ from repro.core import batching
 from repro.core.grid import adjacent_cell_pairs, build_grid, build_tile_plan
 from repro.core.reorder import apply_reorder, inverse_perm, variance_reorder
 from repro.join import QueryService, SimilarityIndex
+from repro.kernels.ref import direct_sqdist, matmul_sqdist
 
 
 def _data(draw, max_n=200, max_d=12):
@@ -192,3 +193,68 @@ def test_capacity_estimate_never_underallocates(d, eps):
 @given(st.integers(0, 10**9), st.floats(0.0, 4.0))
 def test_suggest_capacity_never_below_estimate(est, headroom):
     assert batching.suggest_pairs_capacity(est, headroom) >= est
+
+
+@st.composite
+def raw_point_sets(draw):
+    """Un-quantized fp32 point sets for the matmul-identity property.
+
+    Deliberately NOT pushed through the 1/64 quantizer: the dense tier's
+    ``||a-b||^2 = |a|^2 + |b|^2 - 2 a.b`` identity is where fp32 rounding
+    actually bites (catastrophic cancellation near zero), so the property
+    must hold on arbitrary floats, not just the exact-friendly grid.  The
+    two adversarial shapes are drawn explicitly: duplicated points (true
+    distance exactly 0 -- the identity's worst cancellation case) and
+    constant dimensions (zero-variance axes contribute |a|^2 + |b|^2 mass
+    but no separation).
+    """
+    n = draw(st.integers(2, 48))
+    dims = draw(st.integers(1, 24))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.sampled_from([1.0, 17.0]))
+    pts = (rng.random((n, dims)) * scale).astype(np.float32)
+    variant = draw(st.sampled_from(["plain", "duplicated", "constant_dims"]))
+    if variant == "duplicated":
+        src = rng.integers(0, n, n // 2 + 1)
+        dst = rng.integers(0, n, n // 2 + 1)
+        pts[dst] = pts[src]
+    elif variant == "constant_dims":
+        const_cols = rng.integers(0, dims, dims // 2 + 1)
+        pts[:, const_cols] = pts[0, const_cols]
+    m = draw(st.integers(1, n))
+    return pts[:m], pts[rng.permutation(n)]
+
+
+@settings(max_examples=60, deadline=None)
+@given(raw_point_sets())
+def test_matmul_identity_clamped_and_close_to_direct(ab):
+    """The dense kernel's clamped matmul identity (DESIGN.md #9): never
+    negative, exactly zero on duplicated rows' own pairing, and within
+    fp32 tolerance of the direct ``sum((a-b)^2)`` form on arbitrary data."""
+    a, b = ab
+    got = np.asarray(matmul_sqdist(a, b))
+    want = np.asarray(direct_sqdist(a, b))
+    assert got.shape == (a.shape[0], b.shape[0])
+    assert (got >= 0.0).all()
+    # fp32 relative tolerance, absolute floor scaled by the norm products
+    # that feed the identity (cancellation error is relative to those)
+    floor = 1e-5 * float(
+        np.maximum(np.square(a).sum(1).max(), np.square(b).sum(1).max()) + 1.0
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=floor)
+    # duplicated rows across the two sides: the direct form is exactly 0
+    # there, and clamping must pin the identity's negative dust to 0 too
+    eq = (a[:, None, :] == b[None, :, :]).all(-1)
+    assert (got[eq] <= floor).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(dataset(), st.sampled_from([0.07, 0.19]))
+def test_dense_tier_join_equals_brute(d, eps):
+    """Forced-dense execution is oracle-exact on quantized data, any kind."""
+    cfg = SelfJoinConfig(eps=eps, k=3, tile_size=8, dim_block=8,
+                         execution="dense")
+    res = self_join(d, cfg)
+    assert res.stats.execution == "dense"
+    np.testing.assert_array_equal(res.counts, brute_counts(d, eps))

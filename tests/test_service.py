@@ -215,6 +215,71 @@ def test_index_stays_pinned_at_build_radius_after_knn():
     assert svc.total.num_traces >= warm_traces   # knn traced; range did not
 
 
+def test_mixed_stream_straddling_tier_boundary_compile_contract():
+    """An ``execution="auto"`` stream that flips tiers per request still
+    compiles at most ONE count executable per shape bucket PER TIER.
+
+    Hot batches (cluster members, maximal grid fan-out) dispatch dense;
+    cold batches (empty-corner points, no adjacency) dispatch indexed --
+    same index, same bucket.  The tile tables differ per tier, so each
+    tier owns its executable; the contract bounds the total at
+    buckets x tiers and pins a repeat stream at zero retraces.
+    """
+    d = make_dataset("clustered", 300, 4, seed=60)
+    svc = QueryService(SimilarityIndex(d, _cfg(0.15, execution="auto")))
+    hot = d[:48]
+    cold = np.full((48, 4), 0.99, np.float32)
+    seen = set()
+    for _ in range(3):  # repeats must hit warm executables on both tiers
+        for q, want_tier in ((hot, "dense"), (cold, "indexed")):
+            res = svc.range_count(q, 0.15)
+            np.testing.assert_array_equal(
+                res.counts, bipartite_counts(q, d, 0.15)
+            )
+            assert res.stats.execution == want_tier
+            assert res.stats.cost_indexed > 0 and res.stats.cost_dense > 0
+            seen.add(res.stats.execution)
+    assert seen == {"dense", "indexed"}
+    assert svc.total.execution == "mixed"  # the stream really straddled
+    assert svc.total.num_requests == 6
+    # <= one executable per (bucket, tier); both batches share one bucket
+    assert len(svc.buckets_used) == 1
+    assert svc.total.num_traces <= 2 * len(svc.buckets_used)
+
+    # a second identical straddling stream retraces NOTHING
+    before = svc.total.num_traces
+    for q in (hot, cold, hot, cold):
+        svc.range_count(q, 0.15)
+    assert svc.total.num_traces == before
+
+    # pairs mode honours the same per-tier dispatch and stays exact
+    for q in (hot, cold):
+        rp = svc.range_pairs(q, 0.15)
+        np.testing.assert_array_equal(rp.counts, bipartite_counts(q, d, 0.15))
+
+
+@pytest.mark.parametrize("mode", ["indexed", "dense", "auto"])
+def test_save_load_roundtrips_execution_mode_bit_identically(tmp_path, mode):
+    d = make_dataset("exponential", 211, 16, seed=62)
+    idx = SimilarityIndex(d, _cfg(0.06, execution=mode))
+    svc = QueryService(idx)
+    q = _queries(d, seed=63)
+    want = svc.range_count(q, 0.06)
+    want_pairs = svc.range_pairs(q, 0.06).pairs
+
+    loaded = SimilarityIndex.load(idx.save(tmp_path / f"exec_{mode}"))
+    assert loaded.config == idx.config
+    assert loaded.config.execution == mode  # the mode bit survived the disk
+    svc2 = QueryService(loaded)
+    got = svc2.range_count(q, 0.06)
+    np.testing.assert_array_equal(got.counts, want.counts)
+    np.testing.assert_array_equal(svc2.range_pairs(q, 0.06).pairs, want_pairs)
+    # the reloaded index makes the SAME dispatch decision with the SAME costs
+    assert got.stats.execution == want.stats.execution
+    assert got.stats.cost_indexed == want.stats.cost_indexed
+    assert got.stats.cost_dense == want.stats.cost_dense
+
+
 def test_index_save_load_serves_bit_identically(tmp_path, dataset_case):
     name, d, eps = dataset_case
     idx = SimilarityIndex(d, _cfg(eps))
