@@ -19,17 +19,19 @@ test-8dev:
 bench-engine:
 	PYTHONPATH=src:. $(PYTHON) benchmarks/bench_engine.py
 
-# Tiny-configuration runs of the distributed + serving + hybrid-tier
-# benchmarks (ring ppermute wire pass, entity-partition balance on the
-# indexed engine, the query-service warm-QPS/compile-reuse pass, and the
-# dense-vs-indexed crossover sweep) so no tier can silently rot between
-# PRs.  bench_dense/bench_service also drop BENCH_*.json into
-# BENCH_OUT_DIR (default .bench_out) for bench-compare.
+# Tiny-configuration runs of the distributed + serving + hybrid-tier +
+# mutable-index benchmarks (ring ppermute wire pass, entity-partition
+# balance on the indexed engine, the query-service warm-QPS/compile-reuse
+# pass, the dense-vs-indexed crossover sweep, and the churn-stream
+# delta-vs-rebuild pass) so no tier can silently rot between PRs.
+# bench_comm/bench_dense/bench_service/bench_mutation also drop
+# BENCH_*.json into BENCH_OUT_DIR (default .bench_out) for bench-compare.
 bench-smoke:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_dense.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_mutation.py
 
 # Regression gate: rerun the JSON-emitting benchmarks at tiny scale and
 # diff against the committed baselines (contracts exact, wall times within
@@ -37,6 +39,8 @@ bench-smoke:
 bench-compare:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_dense.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_mutation.py
 	PYTHONPATH=src:. $(PYTHON) benchmarks/compare.py
 
 # Regenerate the committed baselines in-place (run on a quiet machine,
@@ -44,6 +48,8 @@ bench-compare:
 bench-baseline:
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_dense.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_service.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_comm.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_mutation.py
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

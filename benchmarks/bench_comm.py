@@ -22,7 +22,7 @@ import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import measure_fused_vs_host, record
+from benchmarks.common import emit_bench_json, measure_fused_vs_host, record
 from repro.core.distributed import ring_comm_elements
 
 SCRIPT = textwrap.dedent(
@@ -62,15 +62,37 @@ def run_fused(tiny: bool = False):
 
     The subprocess (``common.measure_fused_vs_host``) asserts count parity
     and the contract -- traces == 1, device dispatches == 1 per join.
+    Emits ``BENCH_fused.json`` for the regression gate: the contracts pin
+    the one-trace/one-dispatch discipline and the grid's filter ratio
+    (candidates / n^2 -- deterministic for the fixed dataset, so index
+    filtering power can never silently rot); the metrics gate the fused
+    and host-driven warm wall times within the comparator's slack.
     """
     n, dims = (1_500, 16) if tiny else (12_000, 16)
-    for p, fused_us, host_us, host_disp in measure_fused_vs_host(n, dims, [8]):
+    contracts: dict = {
+        "count_parity": True,           # asserted inside the subprocess
+        "fused_traces": 1,
+        "fused_dispatches_per_join": 1,
+    }
+    metrics: dict = {}
+    info: dict = {"n": n, "dims": dims, "tiny": tiny}
+    for p, fused_us, host_us, host_disp, cand in measure_fused_vs_host(
+        n, dims, [8]
+    ):
+        filter_ratio = cand / float(n * n)
         record(
             f"fused_ring/Syn{dims}D/p={p}", fused_us,
             f"traces=1;executions_per_join=1;device_dispatches=1;"
             f"host_dispatches={host_disp};"
-            f"host_us={host_us:.1f};speedup_vs_host={host_us / fused_us:.2f}",
+            f"host_us={host_us:.1f};speedup_vs_host={host_us / fused_us:.2f};"
+            f"filter_ratio={filter_ratio:.4f}",
         )
+        contracts[f"filter_ratio_pct/p={p}"] = round(100.0 * filter_ratio, 2)
+        metrics[f"fused_us/p={p}"] = fused_us
+        metrics[f"host_us/p={p}"] = host_us
+        info[f"host_dispatches/p={p}"] = host_disp
+        info[f"speedup_vs_host/p={p}"] = round(host_us / fused_us, 2)
+    emit_bench_json("fused", contracts=contracts, metrics=metrics, info=info)
 
 
 def run(tiny: bool = False):

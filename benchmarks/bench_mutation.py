@@ -1,0 +1,156 @@
+"""Mutable-index churn throughput (DESIGN.md #10): delta serving vs rebuild.
+
+Drives a warm ``QueryService`` through a mixed stream of range queries
+interleaved with inserts and deletes, two ways:
+
+  * ``mutate``  -- the mutable path: inserts land in the device-resident
+    delta buffer, deletes become tombstones, queries keep serving from the
+    warm executables (the delta/tombstone epilogue is one extra jitted
+    dense pass);
+  * ``rebuild`` -- the pre-#10 alternative: every mutation rebuilds the
+    whole index from scratch and re-warms the service.
+
+Rows record the per-operation wall time of both and the speedup; the
+stream then compacts and verifies the churned answers are bit-identical to
+a fresh index over the same live set (count parity) with ZERO new traces
+from the swap (the shape-bucket contract).  ``BENCH_mutation.json`` pins
+those two facts as contracts and gates both wall times.
+
+``--tiny`` (or BENCH_SMOKE=1) shrinks the dataset so `make bench-smoke`
+keeps the churn path alive at CI scale.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_bench_json, record
+from repro.core import SelfJoinConfig
+from repro.data import exponential_dataset
+from repro.join import QueryService, SimilarityIndex
+
+# n sits comfortably below its pow2 point bucket (1900 -> 2048, 20000 ->
+# 32768) so the whole churn stream -- and the compacted snapshot -- stays
+# inside the warm shape buckets and the swap_traces == 0 contract holds
+FULL = dict(n=20_000, dims=16, eps=0.04, nq=256, ops=30, batch=64)
+TINY = dict(n=1_900, dims=16, eps=0.06, nq=64, ops=10, batch=32)
+
+
+def _stream(p):
+    """The mutation schedule: (kind, payload) per op, query after each.
+
+    Inserts are drawn from the SAME distribution as the dataset, as real
+    churn would be -- off-distribution inserts would legitimately grow the
+    grid's tile bucket and retrace at the swap.
+    """
+    pool = exponential_dataset(
+        p["batch"] * ((p["ops"] + 1) // 2), p["dims"], seed=6
+    )
+    ops = []
+    for i in range(p["ops"]):
+        if i % 2 == 0:
+            j = i // 2
+            ops.append(("insert", pool[j * p["batch"] : (j + 1) * p["batch"]]))
+        else:
+            ops.append(("delete", p["batch"] // 2))
+    return ops
+
+
+def run(tiny: bool = False):
+    p = TINY if tiny else FULL
+    d = exponential_dataset(p["n"], p["dims"], seed=5)
+    cfg = SelfJoinConfig(eps=p["eps"], k=4, tile_size=32)
+    rng = np.random.default_rng(11)
+    q = d[rng.choice(p["n"], size=p["nq"], replace=False)]
+    ops = _stream(p)
+
+    # -- mutable path: delta inserts + tombstones on one warm service ------
+    idx = SimilarityIndex(d, cfg)
+    svc = QueryService(idx)
+    svc.range_count(q, p["eps"])                 # warm the clean-stream path
+    live = np.arange(p["n"])
+    ins0 = idx.insert(ops[0][1])                 # warm the churn epilogue
+    idx.delete(ins0[: p["batch"] // 2])
+    live_extra = list(ins0[p["batch"] // 2 :])
+    svc.range_count(q, p["eps"])
+    t0 = time.perf_counter()
+    for kind, payload in ops[1:]:
+        if kind == "insert":
+            live_extra.extend(idx.insert(payload))
+        else:
+            kill = rng.choice(live, size=payload, replace=False)
+            idx.delete(kill)
+            live = np.setdiff1d(live, kill, assume_unique=True)
+        svc.range_count(q, p["eps"])
+    mutate_us = (time.perf_counter() - t0) / (len(ops) - 1) * 1e6
+
+    # -- compact: atomic swap must cost zero traces, answers identical -----
+    churned = svc.range_count(q, p["eps"])
+    traces0 = svc.total.num_traces
+    idx.compact()
+    compacted = svc.range_count(q, p["eps"])
+    swap_traces = svc.total.num_traces - traces0
+    count_parity = bool(np.array_equal(churned.counts, compacted.counts))
+    assert count_parity, "compact changed answers"
+
+    # fresh index over the same live set: the churned answers were right
+    fresh = QueryService(SimilarityIndex(idx.points, cfg))
+    assert np.array_equal(fresh.range_count(q, p["eps"]).counts, churned.counts)
+
+    # -- rebuild-per-change alternative (measured on fewer ops: it is the
+    # slow path by construction; per-op cost is what matters) --------------
+    n_rebuild = max(2, (len(ops) - 1) // 5)
+    pts = d.copy()
+    t0 = time.perf_counter()
+    for kind, payload in ops[1 : 1 + n_rebuild]:
+        if kind == "insert":
+            pts = np.concatenate([pts, payload])
+        else:
+            pts = pts[payload:]
+        rb = QueryService(SimilarityIndex(pts, cfg))
+        rb.range_count(q, p["eps"])
+    rebuild_us = (time.perf_counter() - t0) / n_rebuild * 1e6
+    speedup = rebuild_us / mutate_us
+
+    record(
+        "mutation/mutate_per_op", mutate_us,
+        f"delta={idx.epoch};qps={p['nq'] / (mutate_us / 1e6):.0f};"
+        f"swap_traces={swap_traces}",
+    )
+    record(
+        "mutation/rebuild_per_op", rebuild_us,
+        f"speedup_mutate_vs_rebuild={speedup:.1f}",
+    )
+    emit_bench_json(
+        "mutation",
+        contracts={
+            # the shape-bucket contract: swapping the compacted snapshot in
+            # costs no new executables, and the churned stream served the
+            # same counts a from-scratch index over the live set serves
+            "swap_traces": swap_traces,
+            "count_parity": count_parity,
+            "epoch_after_compact": idx.epoch,
+        },
+        metrics={
+            "mutate_per_op_us": mutate_us,
+            "rebuild_per_op_us": rebuild_us,
+        },
+        info={
+            "n": p["n"], "dims": p["dims"], "eps": p["eps"],
+            "nq": p["nq"], "ops": p["ops"], "batch": p["batch"],
+            "speedup_mutate_vs_rebuild": round(speedup, 1), "tiny": tiny,
+        },
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny", action="store_true",
+        default=os.environ.get("BENCH_SMOKE") == "1",
+        help="CI-scale configuration (also via BENCH_SMOKE=1)",
+    )
+    run(tiny=ap.parse_args().tiny)

@@ -25,14 +25,15 @@ from benchmarks.bench_partition_balance import OUT as TIMES_FILE, run as _gen
 
 def run_fused_vs_host(tiny: bool = False):
     n, dims = (1_500, 16) if tiny else (8_000, 16)
-    for p, fused_us, host_us, host_disp in measure_fused_vs_host(
+    for p, fused_us, host_us, host_disp, cand in measure_fused_vs_host(
         n, dims, [1, 2, 4, 8]
     ):
         record(
             f"fig11/fused_vs_host/p={p}", fused_us,
             f"host_us={host_us:.1f};"
             f"speedup_vs_host={host_us / fused_us:.2f};"
-            f"fused_dispatches=1;host_dispatches={host_disp}",
+            f"fused_dispatches=1;host_dispatches={host_disp};"
+            f"filter_ratio={cand / float(n * n):.4f}",
         )
 
 

@@ -89,18 +89,22 @@ _FUSED_VS_HOST_SCRIPT = textwrap.dedent(
         assert fused_eng.fused_traces == 1, "fused ring retraced"
         assert fused_res.stats.num_device_dispatches == 1
         print("ROW", p, fused_us, host_us,
-              host_res.stats.num_device_dispatches, flush=True)
+              host_res.stats.num_device_dispatches,
+              host_res.stats.num_candidates, flush=True)
     """
 )
 
 
 def measure_fused_vs_host(
     n: int, dims: int, workers: Sequence[int], timeout: int = 1800
-) -> List[Tuple[int, float, float, int]]:
+) -> List[Tuple[int, float, float, int, int]]:
     """Warm fused vs host-driven join times on |p|-device meshes.
 
-    Returns ``[(p, fused_us, host_us, host_dispatches)]``; the subprocess
-    asserts count parity and the fused one-trace / one-dispatch contract.
+    Returns ``[(p, fused_us, host_us, host_dispatches, candidates)]`` where
+    ``candidates`` is the point-comparison volume the grid index actually
+    evaluated (filter ratio = candidates / n^2, deterministic for a fixed
+    dataset); the subprocess asserts count parity and the fused
+    one-trace / one-dispatch contract.
     """
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     out = subprocess.run(
@@ -118,8 +122,11 @@ def measure_fused_vs_host(
     rows = []
     for line in out.stdout.splitlines():
         if line.startswith("ROW "):
-            _, p, fused_us, host_us, host_disp = line.split()
-            rows.append((int(p), float(fused_us), float(host_us), int(host_disp)))
+            _, p, fused_us, host_us, host_disp, cand = line.split()
+            rows.append(
+                (int(p), float(fused_us), float(host_us), int(host_disp),
+                 int(cand))
+            )
     return rows
 
 

@@ -2,11 +2,14 @@
 
     PYTHONPATH=src python examples/query_service.py
 
-The serving tier (DESIGN.md #8) on synthetic data: build a ``SimilarityIndex``
-once (REORDER + auto-k + grid + device tiles), persist it, "restart" by
-loading it back, and drive a mixed request stream of batched range counts,
-range pairs and kNN through ``QueryService`` -- watching the compile-reuse
-contract (one executable per shape bucket) hold in the stats.
+The serving tier (DESIGN.md #8, #10) on synthetic data: build a
+``SimilarityIndex`` once (REORDER + auto-k + grid + device tiles), persist
+it, "restart" by loading it back, drive a mixed request stream of batched
+range counts, range pairs and kNN through ``QueryService``, then churn the
+index live -- delta-buffer inserts, tombstone deletes, and a compaction
+whose atomic snapshot swap leaves every answer bit-identical -- watching
+the compile-reuse contract (one executable per shape bucket, zero traces
+across the swap) hold in the stats.
 """
 import os
 import tempfile
@@ -54,14 +57,38 @@ print(f"knn          nq=64  k=8       -> final eps={kn.stats.eps:.3f} "
       f"nearest of q0: ids={kn.indices[0, :4].tolist()} "
       f"dists={np.round(kn.distances[0, :4], 4).tolist()}")
 
-t = service.total
-print(f"stream totals: {t.num_requests} requests, {t.num_queries} queries, "
-      f"{t.num_traces} program traces over {sorted(service.buckets_used)} "
-      f"buckets, {t.num_device_dispatches} dispatches")
-
 # spot-check: the served counts equal float64 brute force on a subset
 sub = D[:1500]
 got = service.range_count(sub, 0.05).counts
 d2 = ((sub[:, None, :].astype(np.float64) - D[None, :, :].astype(np.float64)) ** 2).sum(-1)
 assert np.array_equal(got, (d2 <= 0.05 ** 2).sum(1))
 print("verified against float64 brute force on a 1.5k-query batch.")
+
+# live churn (DESIGN.md #10): inserts land in a device-resident delta
+# buffer, deletes tombstone, and queries keep serving the LIVE set from
+# the same warm executables -- no rebuild on the request path
+new_pts = exponential_dataset(num_points=300, num_dims=16, seed=2)
+new_ids = index.insert(new_pts)
+index.delete(new_ids[:50])
+index.delete(rng.choice(8_000, size=100, replace=False))
+res = service.range_count(q, 0.04)
+print(f"after churn  nq=64  eps=0.040 -> {res.stats.num_results:7d} neighbours  "
+      f"epoch={res.stats.epoch} delta={res.stats.delta_size} "
+      f"tombstones={res.stats.tombstone_count} "
+      f"new_traces={res.stats.num_traces}")
+
+# compact: fold the churn into a fresh snapshot behind an atomic swap --
+# same-bucket shapes mean the swap retraces NOTHING warm
+before = service.range_pairs(q, 0.04)
+traces0 = service.total.num_traces
+index.compact()
+after = service.range_pairs(q, 0.04)
+assert np.array_equal(before.pairs, after.pairs)   # bit-identical across swap
+print(f"compacted to epoch {index.epoch}: |live|={index.num_points}, "
+      f"answers bit-identical, "
+      f"swap cost {service.total.num_traces - traces0} new traces")
+
+t = service.total
+print(f"stream totals: {t.num_requests} requests, {t.num_queries} queries, "
+      f"{t.num_traces} program traces over {sorted(service.buckets_used)} "
+      f"buckets, {t.num_device_dispatches} dispatches")

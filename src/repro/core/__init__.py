@@ -7,7 +7,8 @@ from repro.core.types import (  # noqa: F401
     SelfJoinStats,
 )
 from repro.core.selfjoin import self_join, self_join_hostloop  # noqa: F401
-from repro.core.engine import SelfJoinEngine, make_dense_plan  # noqa: F401
+from repro.core.engine import SelfJoinEngine  # noqa: F401
+from repro.core.snapshot import GridSnapshot, make_dense_plan  # noqa: F401
 from repro.core.cost import (  # noqa: F401
     TierDecision,
     decide,

@@ -254,7 +254,7 @@ class DistributedSelfJoinEngine:
         cfg = self.config
         eng = self.engine_config or EngineConfig()
         t = cfg.tile_size
-        n_pad = self.shards[0].n_pad
+        n_pad = self.shards[0].snapshot.n_pad
 
         q_index = [self.worker_query_index(k) for k in range(p)]
         q_pts = [self._pts[idx] for idx in q_index]
@@ -271,7 +271,8 @@ class DistributedSelfJoinEngine:
         ]
         flat = [qp for row in qplans for qp in row if qp is not None]
         max_qt = max(max((qp.num_q_tiles for qp in flat), default=0), 1)
-        max_dt = max(max((e.plan.num_tiles if e.plan else 0 for e in self.shards), default=0), 1)
+        max_dt = max(max((e.snapshot.plan.num_tiles if e.snapshot.plan else 0
+                  for e in self.shards), default=0), 1)
         max_pr = max((qp.num_pairs for qp in flat), default=0)
         chunk = max(1, min(eng.count_chunk, max(max_pr, 1)))
         n_chunks = max(-(-max_pr // chunk), 1)
@@ -287,7 +288,7 @@ class DistributedSelfJoinEngine:
         dlen = np.zeros((p, max_dt), np.int32)
 
         for j, e in enumerate(self.shards):
-            dt[j], dlen[j] = e.packed_tile_table(max_dt)
+            dt[j], dlen[j] = e.snapshot.packed_tile_table(max_dt)
 
         stats_pairs_total = stats_pairs_eval = stats_candidates = 0
         for k in range(p):
@@ -416,9 +417,11 @@ class DistributedSelfJoinEngine:
             ),
             num_results=int(counts.sum()),
         )
-        stats.num_tiles = sum(e.plan.num_tiles for e in self.shards if e.plan)
+        stats.num_tiles = sum(
+            e.snapshot.plan.num_tiles for e in self.shards if e.snapshot.plan
+        )
         stats.num_nonempty_cells = sum(
-            e.grid.num_cells for e in self.shards if e.grid
+            e.snapshot.grid.num_cells for e in self.shards if e.snapshot.grid
         )
         return SelfJoinResult(counts=counts, stats=stats)
 
@@ -468,9 +471,11 @@ class DistributedSelfJoinEngine:
                 stats.dim_blocks_total += s.dim_blocks_total
                 stats.num_candidates_dense += int(q_index[k].size * shard_sizes[j])
             stats.num_rounds += 1
-        stats.num_tiles = sum(e.plan.num_tiles for e in self.shards if e.plan)
+        stats.num_tiles = sum(
+            e.snapshot.plan.num_tiles for e in self.shards if e.snapshot.plan
+        )
         stats.num_nonempty_cells = sum(
-            e.grid.num_cells for e in self.shards if e.grid
+            e.snapshot.grid.num_cells for e in self.shards if e.snapshot.grid
         )
         stats.num_results = int(counts.sum())
         return SelfJoinResult(counts=counts, stats=stats)

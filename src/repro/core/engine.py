@@ -1,4 +1,4 @@
-"""Device-resident self-join engine (DESIGN.md #1.5).
+"""Device-resident self-join engine (DESIGN.md #1.5, #10).
 
 ``SelfJoinEngine`` keeps the entire hot loop of GPU-Join (Gowanlock &
 Karsin 2018, Alg. 1 lines 11-19 plus constructNeighborTable) on the
@@ -18,22 +18,33 @@ is jitted device code:
                   overflow flag (the host ``np.nonzero`` is gone), already
                   mapped to original point ids via a device gather.
 
+Snapshot/executable split (DESIGN.md #10): every piece of data-derived
+state -- points, REORDER permutation, grid, tile plan, device tables,
+dense tables -- lives in a frozen ``GridSnapshot`` (``core/snapshot.py``);
+the engine holds only configuration and the compiled chunk programs.
+Programs are keyed by (mode, chunk shape, backend), never by data
+identity, so ``swap_snapshot`` -- one reference assignment -- replaces the
+dataset behind a warm engine without invalidating a single executable, as
+long as the new snapshot keeps the old shape buckets (it does, by the
+floor-carrying contract of ``GridSnapshot.rebuilt`` and the mutable
+index's ``compact``).
+
 Chunking / compilation-caching contract: the candidate tile-pair list is
 processed in fixed-size, zero-padded chunks; eps, the chunk's real length,
 and the running (buffer, offset, overflow, counts) state are all traced, so
 XLA compiles **at most one program per (mode, chunk shape)** and the Python
 chunk loop dispatches that same executable -- no host compute, no host
-transfers inside the loop.  The executables and the grid index are reused
-across ``count()`` / ``pairs()`` / ``query()`` calls; a multi-eps sweep
-recompiles nothing.
+transfers inside the loop.  The executables are module-level, shared by
+every engine instance; a multi-eps sweep recompiles nothing.
 
 ``repro.core.selfjoin.self_join`` is a thin wrapper over this class.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -45,12 +56,16 @@ from repro.core.grid import (
     GridIndex,
     QueryTilePlan,
     TilePlan,
-    build_grid,
     build_query_tile_plan,
-    build_tile_plan,
     pad_axis0,
 )
-from repro.core.reorder import apply_reorder, variance_reorder
+from repro.core.reorder import apply_reorder
+from repro.core.snapshot import (  # noqa: F401  (re-exported compat names)
+    DenseTables,
+    GridSnapshot,
+    _chunk_list,
+    make_dense_plan,
+)
 from repro.core.types import (
     EngineConfig,
     SelfJoinConfig,
@@ -206,67 +221,6 @@ def _unsort_counts(counts_sorted, point_order):
     return jnp.zeros_like(counts_sorted).at[point_order].set(counts_sorted)
 
 
-def _chunk_list(
-    pair_a: np.ndarray, pair_b: np.ndarray, chunk: int, cache: dict
-) -> List[Tuple[jax.Array, jax.Array, int]]:
-    """Padded device chunks of a candidate pair list, cached per chunk size."""
-    got = cache.get(chunk)
-    if got is None:
-        got = [
-            (pa, pb, real)
-            for _, pa, pb, real in ops._chunks(pair_a, pair_b, chunk)
-        ]
-        cache[chunk] = got
-    return got
-
-
-# ---------------------------------------------------------------------------
-# The dense execution tier (DESIGN.md #9).
-# ---------------------------------------------------------------------------
-
-
-def make_dense_plan(n_points: int, tile_size: int) -> TilePlan:
-    """Sequential full-tile plan: the dense tier's work list.
-
-    The indexed tier's tiles follow grid-cell boundaries, so in high
-    dimensions (many near-singleton cells) they are mostly padding and the
-    tile-pair fan-out explodes.  The dense tier re-tiles ``pts_sorted``
-    *sequentially* -- every tile full except the last -- and lists the
-    complete tile cross product.  Same ``TilePlan`` type, same chunk
-    programs downstream; only the pair list and the per-tile layout differ.
-    """
-    t = int(tile_size)
-    num_tiles = -(-int(n_points) // t) if n_points else 0
-    tile_start = np.arange(num_tiles, dtype=np.int64) * t
-    tile_len = np.minimum(int(n_points) - tile_start, t)
-    idx = np.arange(num_tiles, dtype=np.int64)
-    return TilePlan(
-        tile_size=t,
-        tile_start=tile_start.astype(np.int32),
-        tile_len=tile_len.astype(np.int32),
-        tile_cell=np.zeros(num_tiles, np.int32),  # no cells in the dense tier
-        pair_a=np.repeat(idx, num_tiles).astype(np.int32),
-        pair_b=np.tile(idx, num_tiles).astype(np.int32),
-        num_tile_pairs_total=num_tiles * num_tiles,
-        num_candidates=int(n_points) * int(n_points),
-    )
-
-
-@dataclasses.dataclass
-class _DenseTables:
-    """Device-resident dense-tier twin of the engine's indexed tables."""
-
-    plan: TilePlan
-    tiles: jax.Array          # (num_tiles, T, n_pad) f32, sequential layout
-    tile_len: jax.Array       # (num_tiles,) int32
-    tile_start: jax.Array     # (num_tiles,) int32 into pts_sorted
-    _chunk_cache: Dict[int, list] = dataclasses.field(default_factory=dict)
-
-    def chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
-        return _chunk_list(self.plan.pair_a, self.plan.pair_b, chunk,
-                           self._chunk_cache)
-
-
 # ---------------------------------------------------------------------------
 # The bipartite query-plan API (DESIGN.md #8).
 # ---------------------------------------------------------------------------
@@ -290,21 +244,23 @@ class QueryPlanTables:
 
     Layout contract: positions ``[0, n_slots)`` are query rows in q-sorted
     order (real rows first, zero padding after), positions ``[n_slots,
-    n_slots + N)`` are the engine's grid-sorted data points.  ``tile_start``
-    and ``order`` address that combined position space, so the *same* arrays
-    serve counts mode (A-side scatter into a ``(n_slots,)`` vector; B-side
-    starts never read below ``n_slots + N``) and pairs mode (both sides
-    decode through ``order`` to original query rows / data ids).
+    n_slots + point_rows)`` are the engine's grid-sorted data points padded
+    to the snapshot's pow2 ``point_rows`` bucket (pad positions are never
+    referenced by a valid lane or pair list).  ``tile_start`` and ``order``
+    address that combined position space, so the *same* arrays serve counts
+    mode (A-side scatter into a ``(n_slots,)`` vector; B-side starts never
+    read below ``n_slots``) and pairs mode (both sides decode through
+    ``order`` to original query rows / data ids).
     """
 
     eps: float                     # radius the plan was built for
     nq: int                        # real query rows
     n_slots: int                   # padded query-position space (>= nq)
     qplan: QueryTilePlan           # the host-side plan (stats + q_order live here)
-    tiles: jax.Array               # (q_tile_rows + num_d_tiles, T, n_pad) f32
-    tile_len: jax.Array            # (q_tile_rows + num_d_tiles,) int32
+    tiles: jax.Array               # (q_tile_rows + d_tile_rows, T, n_pad) f32
+    tile_len: jax.Array            # (q_tile_rows + d_tile_rows,) int32
     tile_start: jax.Array          # combined position space (B side + n_slots)
-    order: jax.Array               # (n_slots + N,) int32 position -> original id
+    order: jax.Array               # (n_slots + point_rows,) int32 position -> id
     pair_a: np.ndarray             # (P,) int32 combined-table A (query-tile) index
     pair_b: np.ndarray             # (P,) int32 combined-table B (data-tile) index
     execution: str = "indexed"     # tier the tables realize: "indexed" | "dense"
@@ -328,15 +284,16 @@ class QueryPlanTables:
 
 
 class SelfJoinEngine:
-    """Reusable device-resident self-join over one dataset.
+    """Reusable device-resident self-join over one dataset snapshot.
 
-    Builds the grid index once (at construction, for ``config.eps``) and
-    keeps the tiled point layout resident on device.  ``count()`` /
-    ``pairs()`` / ``query()`` reuse both the index and the compiled chunk
-    programs; querying a *larger* eps than the index was built for
-    transparently rebuilds the index (a smaller eps reuses it -- the
-    candidate set is a superset, and the distance filter runs at the
-    queried eps).
+    Builds a ``GridSnapshot`` once (at construction, for ``config.eps``);
+    ``count()`` / ``pairs()`` / ``query()`` reuse both the snapshot and the
+    compiled chunk programs; querying a *larger* eps than the snapshot was
+    built for transparently swaps in a rebuilt snapshot (a smaller eps
+    reuses it -- the candidate set is a superset, and the distance filter
+    runs at the queried eps).  ``swap_snapshot`` is the mutable-index
+    re-entry point: one reference assignment replaces the dataset and
+    invalidates no compiled program.
 
     ``eps == 0`` is supported (degenerate join: duplicates + self); the
     grid is then binned at unit width, which is correct for any radius
@@ -354,19 +311,20 @@ class SelfJoinEngine:
     ):
         self.config = config
         self.engine = engine_config or EngineConfig()
-        pts = np.ascontiguousarray(np.asarray(d, dtype=np.float32))
-        self.num_points, self.num_dims = pts.shape
-        self._pts = pts
-        self._work = pts
-        self._perm = None
-        if config.reorder and self.num_points:
-            self._work, self._perm = variance_reorder(pts, config.sample_frac)
-        self._index_eps: Optional[float] = None
-        self.grid: Optional[GridIndex] = None
-        self.plan: Optional[TilePlan] = None
-        self._dense: Optional[_DenseTables] = None
-        if self.num_points:
-            self._build_index(config.eps)
+        self.snapshot = GridSnapshot.build(d, config)
+
+    @classmethod
+    def from_snapshot(
+        cls,
+        snapshot: GridSnapshot,
+        engine_config: Optional[EngineConfig] = None,
+    ) -> "SelfJoinEngine":
+        """Engine over an existing snapshot (no host build at all)."""
+        self = object.__new__(cls)
+        self.config = snapshot.config
+        self.engine = engine_config or EngineConfig()
+        self.snapshot = snapshot
+        return self
 
     @classmethod
     def from_prebuilt(
@@ -386,72 +344,109 @@ class SelfJoinEngine:
         device placement runs again, so the restarted engine is
         bit-identical to the one that was saved.
         """
-        self = object.__new__(cls)
-        self.config = config
-        self.engine = engine_config or EngineConfig()
-        pts = np.ascontiguousarray(np.asarray(pts, dtype=np.float32))
-        self.num_points, self.num_dims = pts.shape
-        self._pts = pts
-        self._perm = None if perm is None else np.asarray(perm)
-        self._work = pts if self._perm is None else apply_reorder(pts, self._perm)
-        self.grid = grid
-        self.plan = plan
-        self._dense = None
-        self._index_eps = None if index_eps is None else float(index_eps)
-        if self.grid is not None:
-            self._device_index()
-        return self
-
-    # -- index ------------------------------------------------------------
-
-    def _build_index(self, eps: float) -> None:
-        cfg = self.config
-        self.grid = build_grid(self._work, eps, cfg.k)  # eps=0-safe (unit bins)
-        self.plan = build_tile_plan(self.grid, cfg.tile_size, cfg.sortidu)
-        self._index_eps = float(eps)
-        self._device_index()
-
-    def _device_index(self) -> None:
-        """Place the built (grid, plan) index on device (shared with load)."""
-        cfg = self.config
-        self._tile_start = jnp.asarray(self.plan.tile_start, jnp.int32)
-        self._tile_len = jnp.asarray(self.plan.tile_len, jnp.int32)
-        self._point_order = jnp.asarray(self.grid.point_order, jnp.int32)
-        self._tiles = ops.make_tiles_device(
-            jnp.asarray(self.grid.pts_sorted),
-            self._tile_start,
-            self._tile_len,
-            tile_size=cfg.tile_size,
-            dim_block=cfg.dim_block,
+        return cls.from_snapshot(
+            GridSnapshot.from_arrays(pts, perm, grid, plan, index_eps, config),
+            engine_config,
         )
-        self._chunk_cache: dict = {}
-        self._dense = None  # dense layout follows pts_sorted; rebuild lazily
+
+    # -- snapshot management ----------------------------------------------
+
+    def swap_snapshot(self, snapshot: GridSnapshot) -> None:
+        """Atomically replace the data snapshot behind the warm executables.
+
+        One reference assignment: requests that pinned the previous
+        snapshot keep serving it unchanged, and no compiled program is
+        invalidated (programs key on shapes, and the snapshot's pow2 row
+        buckets keep shapes stable across a compact/rebuild of the same
+        bucket).
+        """
+        if snapshot.config != self.config:
+            raise ValueError(
+                "snapshot was built under a different SelfJoinConfig"
+            )
+        self.snapshot = snapshot
+
+    def snapshot_for(self, eps: float) -> GridSnapshot:
+        """A snapshot whose index covers ``eps``, WITHOUT swapping.
+
+        The serving tier's epoch pinning: an over-radius request builds a
+        temporary rebuilt snapshot, serves from it, and drops it -- the
+        engine's resident snapshot (and every warm executable keyed to its
+        buckets) is untouched.
+        """
+        snap = self.snapshot
+        if snap.num_points == 0 or (
+            snap.index_eps is not None and eps <= snap.index_eps
+        ):
+            return snap
+        return snap.rebuilt(eps)
 
     def _ensure_index(self, eps: float) -> None:
-        if self._index_eps is None or eps > self._index_eps:
-            self._build_index(eps)
+        snap = self.snapshot
+        if snap.num_points == 0:
+            return
+        if snap.index_eps is None or eps > snap.index_eps:
+            self.swap_snapshot(snap.rebuilt(eps))
 
-    def _ensure_dense(self) -> _DenseTables:
-        """Build (lazily, once per index build) the dense-tier tables."""
-        if self._dense is None:
-            cfg = self.config
-            plan = make_dense_plan(self.num_points, cfg.tile_size)
-            tiles = ops.make_tiles_device(
-                jnp.asarray(self.grid.pts_sorted),
-                jnp.asarray(plan.tile_start, jnp.int32),
-                jnp.asarray(plan.tile_len, jnp.int32),
-                tile_size=cfg.tile_size,
-                dim_block=cfg.dim_block,
-            )
-            self._dense = _DenseTables(
-                plan=plan,
-                tiles=tiles,
-                tile_len=jnp.asarray(plan.tile_len, jnp.int32),
-                tile_start=jnp.asarray(plan.tile_start, jnp.int32),
-            )
-        return self._dense
+    # -- delegating views (compat surface over the snapshot) ---------------
 
-    def resolve_execution(self, eps: Optional[float] = None) -> cost_mod.TierDecision:
+    @property
+    def num_points(self) -> int:
+        return self.snapshot.num_points
+
+    @property
+    def num_dims(self) -> int:
+        return self.snapshot.num_dims
+
+    @property
+    def grid(self) -> Optional[GridIndex]:
+        return self.snapshot.grid
+
+    @property
+    def plan(self) -> Optional[TilePlan]:
+        return self.snapshot.plan
+
+    @property
+    def n_pad(self) -> int:
+        """Padded dimension count of the tile layout (n -> dim_block multiple)."""
+        return self.snapshot.n_pad
+
+    @property
+    def _pts(self) -> np.ndarray:
+        return self.snapshot.pts
+
+    @property
+    def _perm(self) -> Optional[np.ndarray]:
+        return self.snapshot.perm
+
+    @property
+    def _index_eps(self) -> Optional[float]:
+        return self.snapshot.index_eps
+
+    @property
+    def _tiles(self) -> jax.Array:
+        return self.snapshot.tiles
+
+    @property
+    def _tile_len(self) -> jax.Array:
+        return self.snapshot.tile_len
+
+    @property
+    def _tile_start(self) -> jax.Array:
+        return self.snapshot.tile_start
+
+    @property
+    def _point_order(self) -> jax.Array:
+        return self.snapshot.point_order
+
+    @property
+    def _num_dim_blocks(self) -> int:
+        return self.snapshot.num_dim_blocks
+
+    def resolve_execution(
+        self, eps: Optional[float] = None,
+        snapshot: Optional[GridSnapshot] = None,
+    ) -> cost_mod.TierDecision:
         """Cost-model tier decision for a self-join at ``eps`` (DESIGN.md #9).
 
         Always computes both estimates (even under a forced mode) so stats
@@ -459,37 +454,36 @@ class SelfJoinEngine:
         """
         eps = self.config.eps if eps is None else float(eps)
         cfg = self.config
-        if self.num_points == 0:
+        if snapshot is None:
+            if self.num_points == 0:
+                return cost_mod.decide(0.0, 0.0, cfg.execution)
+            self._ensure_index(eps)
+            snapshot = self.snapshot
+        if snapshot.num_points == 0:
             return cost_mod.decide(0.0, 0.0, cfg.execution)
-        self._ensure_index(eps)
         ci = cost_mod.indexed_join_cost(
-            self.plan.num_pairs, self.plan.num_candidates,
-            cfg.tile_size, self.n_pad,
+            snapshot.plan.num_pairs, snapshot.plan.num_candidates,
+            cfg.tile_size, snapshot.n_pad,
         )
         cd = cost_mod.dense_join_cost(
-            self.num_points, self.num_points, cfg.tile_size, self.n_pad
+            snapshot.num_points, snapshot.num_points,
+            cfg.tile_size, snapshot.n_pad,
         )
         return cost_mod.decide(ci, cd, cfg.execution)
 
-    def _chunks(self, chunk: int) -> List[Tuple[jax.Array, jax.Array, int]]:
-        """Padded device chunks of the candidate pair list, cached."""
-        return _chunk_list(
-            self.plan.pair_a, self.plan.pair_b, chunk, self._chunk_cache
-        )
-
-    def _base_stats(self, eps: float) -> SelfJoinStats:
+    def _base_stats(self, eps: float, snap: GridSnapshot) -> SelfJoinStats:
         stats = SelfJoinStats(
-            num_points=self.num_points,
-            num_dims=self.num_dims,
-            k=min(self.config.k, self.num_dims),
+            num_points=snap.num_points,
+            num_dims=snap.num_dims,
+            k=min(self.config.k, snap.num_dims),
         )
-        if self.plan is not None:
-            stats.num_nonempty_cells = self.grid.num_cells
-            stats.num_tiles = self.plan.num_tiles
-            stats.num_tile_pairs_total = self.plan.num_tile_pairs_total
-            stats.num_tile_pairs_evaluated = self.plan.num_pairs
-            stats.num_candidates = self.plan.num_candidates
-            stats.num_candidates_dense = self.num_points * self.num_points
+        if snap.plan is not None:
+            stats.num_nonempty_cells = snap.grid.num_cells
+            stats.num_tiles = snap.plan.num_tiles
+            stats.num_tile_pairs_total = snap.plan.num_tile_pairs_total
+            stats.num_tile_pairs_evaluated = snap.plan.num_pairs
+            stats.num_candidates = snap.plan.num_candidates
+            stats.num_candidates_dense = snap.num_points * snap.num_points
         return stats
 
     @staticmethod
@@ -498,33 +492,38 @@ class SelfJoinEngine:
         stats.cost_indexed = dec.cost_indexed
         stats.cost_dense = dec.cost_dense
 
-    @property
-    def _num_dim_blocks(self) -> int:
-        return self._tiles.shape[2] // self.config.dim_block
-
-    @property
-    def n_pad(self) -> int:
-        """Padded dimension count of the tile layout (n -> dim_block multiple)."""
-        db = self.config.dim_block
-        return ((self.num_dims + db - 1) // db) * db
-
-    def build_query_plan(self, q_pts: np.ndarray, eps: Optional[float] = None):
+    def build_query_plan(
+        self,
+        q_pts: np.ndarray,
+        eps: Optional[float] = None,
+        snapshot: Optional[GridSnapshot] = None,
+    ):
         """Bipartite Q-tile x D-tile plan for ``q_pts`` against this index.
 
         ``q_pts`` is in ORIGINAL coordinates; the engine applies its own
         REORDER permutation.  Shared by ``count_query`` and the fused
         distributed ring packer (``core/dist_engine.py``), which needs the
         plan host-side to pad it into the uniform per-round tables.
-        Returns ``None`` when the engine indexes no points (every candidate
-        list would be empty).
+        With an explicit ``snapshot`` the plan is built against it (the
+        serving tier's pinned epoch); otherwise the engine's resident
+        snapshot is used, rebuilt if ``eps`` outgrows it.  Returns ``None``
+        when the snapshot indexes no points (every candidate list would be
+        empty).
         """
-        if self.num_points == 0:
-            return None
         eps = self.config.eps if eps is None else float(eps)
-        self._ensure_index(eps)
-        q_work = apply_reorder(q_pts, self._perm) if self._perm is not None else q_pts
+        if snapshot is None:
+            if self.num_points == 0:
+                return None
+            self._ensure_index(eps)
+            snapshot = self.snapshot
+        if snapshot.num_points == 0:
+            return None
+        q_work = (
+            apply_reorder(q_pts, snapshot.perm)
+            if snapshot.perm is not None else q_pts
+        )
         return build_query_tile_plan(
-            self.grid, self.plan, q_work, self.config.sortidu
+            snapshot.grid, snapshot.plan, q_work, self.config.sortidu
         )
 
     def prepare_query(
@@ -533,6 +532,7 @@ class SelfJoinEngine:
         eps: Optional[float] = None,
         *,
         pad_queries_to: Optional[int] = None,
+        snapshot: Optional[GridSnapshot] = None,
     ) -> Optional[QueryPlanTables]:
         """Build the device-ready combined (query | data) tables for ``q_pts``.
 
@@ -546,15 +546,25 @@ class SelfJoinEngine:
         to that many rows (q-sorted points, query tiles, and the scatter
         target all pad to the same bucket; padding tiles carry length 0 and
         padded positions are never referenced by a valid lane), so all
-        batches in the same bucket share one compiled executable.  Returns
-        ``None`` when either side is empty.
+        batches in the same bucket share one compiled executable.  The data
+        side is padded by the snapshot's own pow2 buckets, so tables built
+        against two snapshots of the same buckets share shapes too.
+        ``snapshot`` pins an explicit snapshot (no engine mutation); by
+        default the resident one serves, rebuilt if ``eps`` outgrows it.
+        Returns ``None`` when either side is empty.
         """
         eps = self.config.eps if eps is None else float(eps)
         q_pts = np.ascontiguousarray(np.asarray(q_pts, dtype=np.float32))
         nq = q_pts.shape[0]
-        if nq == 0 or self.num_points == 0:
+        if snapshot is None:
+            if nq == 0 or self.num_points == 0:
+                return None
+            self._ensure_index(eps)
+            snapshot = self.snapshot
+        snap = snapshot
+        if nq == 0 or snap.num_points == 0:
             return None
-        qplan = self.build_query_plan(q_pts, eps)
+        qplan = self.build_query_plan(q_pts, eps, snapshot=snap)
         cfg = self.config
         n_slots = nq if pad_queries_to is None else int(pad_queries_to)
         if n_slots < nq:
@@ -567,10 +577,11 @@ class SelfJoinEngine:
         # tier only re-tiles the already-sorted rows sequentially).
         dec = cost_mod.decide(
             cost_mod.indexed_join_cost(
-                qplan.num_pairs, qplan.num_candidates, cfg.tile_size, self.n_pad
+                qplan.num_pairs, qplan.num_candidates, cfg.tile_size,
+                snap.n_pad,
             ),
             cost_mod.dense_join_cost(
-                nq, self.num_points, cfg.tile_size, self.n_pad
+                nq, snap.num_points, cfg.tile_size, snap.n_pad
             ),
             cfg.execution,
         )
@@ -582,20 +593,20 @@ class SelfJoinEngine:
             qt_rows = qplan.num_q_tiles if dec.execution == "indexed" else -(-nq // t)
         q_sorted = pad_axis0(qplan.q_sorted, n_slots)
         if dec.execution == "dense":
-            dt = self._ensure_dense()
+            dt = snap.dense_tables()
             q_start = (np.arange(qt_rows, dtype=np.int64) * t).astype(np.int32)
             q_len = np.clip(nq - q_start.astype(np.int64), 0, t).astype(np.int32)
             nqt = -(-nq // t)  # real (non-empty) query tiles
             pair_a = np.repeat(np.arange(nqt, dtype=np.int64), dt.plan.num_tiles)
             pair_d = np.tile(np.arange(dt.plan.num_tiles, dtype=np.int64), nqt)
             d_tiles, d_len, d_start = dt.tiles, dt.tile_len, dt.tile_start
-            num_candidates = nq * self.num_points
+            num_candidates = nq * snap.num_points
         else:
             q_start = pad_axis0(qplan.q_tile_start, qt_rows)
             q_len = pad_axis0(qplan.q_tile_len, qt_rows)
             pair_a = qplan.pair_q.astype(np.int64)
             pair_d = qplan.pair_d.astype(np.int64)
-            d_tiles, d_len, d_start = self._tiles, self._tile_len, self._tile_start
+            d_tiles, d_len, d_start = snap.tiles, snap.tile_len, snap.tile_start
             num_candidates = qplan.num_candidates
         q_tiles = ops.make_tiles_device(
             jnp.asarray(q_sorted),
@@ -611,13 +622,14 @@ class SelfJoinEngine:
         )
         # position -> original id: query rows first (pad rows are never
         # addressed by a valid lane; their fill value is irrelevant), then
-        # the data points' grid-sort permutation
+        # the data points' grid-sort permutation, padded to the snapshot's
+        # point_rows bucket so the shape survives snapshot swaps
         order = jnp.concatenate(
             [
                 jnp.asarray(
                     pad_axis0(qplan.q_order.astype(np.int64), n_slots), jnp.int32
                 ),
-                self._point_order,
+                snap.point_order_padded,
             ]
         )
         pair_b = (pair_d + qt_rows).astype(np.int32)
@@ -639,32 +651,13 @@ class SelfJoinEngine:
         )
 
     def packed_tile_table(self, num_tiles: int):
-        """Host-side ``(tiles, tile_len)`` padded to ``num_tiles`` rows.
-
-        The fused ring payload: every shard's tile table is padded to the
-        fleet-wide maximum so all ring positions trace with one shape;
-        padding rows carry ``tile_len == 0`` (the sentinel the chunk
-        program's validity mask already understands), so they contribute
-        nothing wherever a padded pair list references them.
-        """
-        t = self.config.tile_size
-        tiles = np.zeros((num_tiles, t, self.n_pad), np.float32)
-        tile_len = np.zeros(num_tiles, np.int32)
-        if self.plan is not None and self.plan.num_tiles:
-            real, lens = ops.make_tiles(
-                self.grid.pts_sorted,
-                self.plan.tile_start,
-                self.plan.tile_len,
-                t,
-                self.config.dim_block,
-            )
-            tiles[: real.shape[0]] = real
-            tile_len[: lens.shape[0]] = lens
-        return tiles, tile_len
+        """Host tile table padded to ``num_tiles`` rows (delegates to the
+        snapshot; kept for callers that hold only the engine)."""
+        return self.snapshot.packed_tile_table(num_tiles)
 
     # -- queries ----------------------------------------------------------
 
-    def _self_tables(self, dec: cost_mod.TierDecision):
+    def _self_tables(self, dec: cost_mod.TierDecision, snap: GridSnapshot):
         """Device tables of the tier ``dec`` chose, one tuple for both modes.
 
         Returns ``(tiles, tile_len, tile_start, chunks_fn, plan, backend,
@@ -674,14 +667,14 @@ class SelfJoinEngine:
         """
         cfg = self.config
         if dec.execution == "dense":
-            dt = self._ensure_dense()
+            dt = snap.dense_tables()
             return (
                 dt.tiles, dt.tile_len, dt.tile_start, dt.chunks, dt.plan,
                 ops.backend_name("dense", cfg.use_pallas), False,
             )
         return (
-            self._tiles, self._tile_len, self._tile_start, self._chunks,
-            self.plan, ops.backend_name("indexed", cfg.use_pallas), cfg.shortc,
+            snap.tiles, snap.tile_len, snap.tile_start, snap.chunks,
+            snap.plan, ops.backend_name("indexed", cfg.use_pallas), cfg.shortc,
         )
 
     def count(self, eps: Optional[float] = None) -> SelfJoinResult:
@@ -689,21 +682,23 @@ class SelfJoinEngine:
         eps = self.config.eps if eps is None else float(eps)
         if self.num_points == 0:
             return SelfJoinResult(
-                counts=np.zeros(0, np.int64), stats=self._base_stats(eps)
+                counts=np.zeros(0, np.int64),
+                stats=self._base_stats(eps, self.snapshot),
             )
         self._ensure_index(eps)
+        snap = self.snapshot
         cfg, eng = self.config, self.engine
         dec = self.resolve_execution(eps)
         tiles, tile_len, tile_start, chunks, plan, backend, shortc = (
-            self._self_tables(dec)
+            self._self_tables(dec, snap)
         )
-        stats = self._base_stats(eps)
+        stats = self._base_stats(eps, snap)
         self._record_decision(stats, dec)
         if dec.execution == "dense":
             stats.num_tile_pairs_evaluated = plan.num_pairs
             stats.num_candidates = plan.num_candidates
 
-        counts_sorted = jnp.zeros(self.num_points, jnp.int32)
+        counts_sorted = jnp.zeros(snap.num_points, jnp.int32)
         skipped_tot = jnp.zeros((), jnp.int32)
         for pa, pb, real in chunks(eng.count_chunk):
             counts_sorted, skipped_tot = _count_chunk_program(
@@ -716,14 +711,19 @@ class SelfJoinEngine:
             )
             stats.num_chunks += 1
         counts = np.asarray(
-            _unsort_counts(counts_sorted, self._point_order)
+            _unsort_counts(counts_sorted, snap.point_order)
         ).astype(np.int64)
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
-        stats.dim_blocks_total = plan.num_pairs * self._num_dim_blocks
+        stats.dim_blocks_total = plan.num_pairs * snap.num_dim_blocks
         return SelfJoinResult(counts=counts, stats=stats)
 
-    def count_query(self, q: np.ndarray, eps: Optional[float] = None) -> SelfJoinResult:
+    def count_query(
+        self,
+        q: np.ndarray,
+        eps: Optional[float] = None,
+        snapshot: Optional[GridSnapshot] = None,
+    ) -> SelfJoinResult:
         """Per-query-point counts of indexed points within eps of each q.
 
         The bipartite sub-plan of the distributed tier (DESIGN.md #7):
@@ -739,19 +739,21 @@ class SelfJoinEngine:
         q_pts = np.ascontiguousarray(np.asarray(q, dtype=np.float32))
         nq = q_pts.shape[0]
         cfg, eng = self.config, self.engine
-        tab = self.prepare_query(q_pts, eps)
+        tab = self.prepare_query(q_pts, eps, snapshot=snapshot)
+        snap = snapshot if snapshot is not None else self.snapshot
         if tab is None:
             return SelfJoinResult(
-                counts=np.zeros(nq, np.int64), stats=self._base_stats(eps)
+                counts=np.zeros(nq, np.int64),
+                stats=self._base_stats(eps, snap),
             )
         qplan = tab.qplan
 
-        stats = self._base_stats(eps)
+        stats = self._base_stats(eps, snap)
         stats.num_points = nq
         stats.num_tile_pairs_total = qplan.num_tile_pairs_total
         stats.num_tile_pairs_evaluated = tab.num_pairs
         stats.num_candidates = tab.num_candidates
-        stats.num_candidates_dense = nq * self.num_points
+        stats.num_candidates_dense = nq * snap.num_points
         stats.num_tiles = int(tab.tiles.shape[0])
         stats.execution = tab.execution
         stats.cost_indexed = tab.cost_indexed
@@ -776,7 +778,7 @@ class SelfJoinEngine:
         ).astype(np.int64)
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
-        stats.dim_blocks_total = tab.num_pairs * self._num_dim_blocks
+        stats.dim_blocks_total = tab.num_pairs * snap.num_dim_blocks
         return SelfJoinResult(counts=counts, stats=stats)
 
     def pairs(
@@ -798,14 +800,15 @@ class SelfJoinEngine:
         if self.num_points == 0:
             return SelfJoinResult(
                 counts=np.zeros(0, np.int64),
-                stats=self._base_stats(eps),
+                stats=self._base_stats(eps, self.snapshot),
                 pairs=np.zeros((0, 2), np.int32),
             )
         self._ensure_index(eps)
+        snap = self.snapshot
         cfg, eng = self.config, self.engine
         dec = self.resolve_execution(eps)
         tiles, tile_len, tile_start, chunks, plan, backend, _ = (
-            self._self_tables(dec)
+            self._self_tables(dec, snap)
         )
 
         explicit = max_pairs if max_pairs is not None else eng.max_pairs
@@ -822,7 +825,7 @@ class SelfJoinEngine:
 
         retries = 0
         while True:
-            stats = self._base_stats(eps)
+            stats = self._base_stats(eps, snap)
             self._record_decision(stats, dec)
             if dec.execution == "dense":
                 stats.num_tile_pairs_evaluated = plan.num_pairs
@@ -834,7 +837,7 @@ class SelfJoinEngine:
                 buf, offset, max_hits = _pairs_chunk_program(
                     buf, offset, max_hits,
                     tiles, tile_len, tile_start,
-                    self._point_order, pa, pb, real, eps,
+                    snap.point_order, pa, pb, real, eps,
                     hit_cap=hit_cap, dim_block=cfg.dim_block,
                     backend=backend, interpret=eng.interpret,
                 )
@@ -861,11 +864,11 @@ class SelfJoinEngine:
         pairs = np.asarray(buf[:num])
         counts = np.asarray(
             _counts_from_pairs(
-                jnp.zeros(self.num_points, jnp.int32), buf, offset
+                jnp.zeros(snap.num_points, jnp.int32), buf, offset
             )
         ).astype(np.int64)
         stats.num_results = int(counts.sum())
-        stats.dim_blocks_total = plan.num_pairs * self._num_dim_blocks
+        stats.dim_blocks_total = plan.num_pairs * snap.num_dim_blocks
         stats.pairs_capacity = cap
         stats.overflow_retries = retries
         return SelfJoinResult(counts=counts, stats=stats, pairs=pairs)
@@ -878,7 +881,9 @@ class SelfJoinEngine:
         actually run.
         """
         cfg, eng = self.config, self.engine
-        tiles, tile_len, _, _, plan, backend, _ = self._self_tables(dec)
+        tiles, tile_len, _, _, plan, backend, _ = self._self_tables(
+            dec, self.snapshot
+        )
         est = batching_mod.estimate_result_size(
             tiles, tile_len, plan, eps=eps,
             dim_block=cfg.dim_block, backend=backend,
@@ -892,11 +897,11 @@ class SelfJoinEngine:
         return_pairs: bool = False,
         max_pairs: Optional[int] = None,
     ) -> List[SelfJoinResult]:
-        """Multi-eps sweep over one index and one set of executables.
+        """Multi-eps sweep over one snapshot and one set of executables.
 
-        The index is built once at ``max(eps_values)``; every eps then runs
-        through the already-compiled chunk programs (eps is traced, so no
-        recompilation happens between sweep points).  In auto-sized pairs
+        The snapshot is built once at ``max(eps_values)``; every eps then
+        runs through the already-compiled chunk programs (eps is traced, so
+        no recompilation happens between sweep points).  In auto-sized pairs
         mode the result-size estimate also runs once, at the largest eps --
         its capacity bounds every smaller sweep point.
         """

@@ -186,6 +186,20 @@ def build_grid(d: np.ndarray, eps: float, k: int) -> GridIndex:
     )
 
 
+def bucket_rows(n: int, floor: int = 1) -> int:
+    """Power-of-two row bucket: smallest pow2 >= max(n, floor, 1).
+
+    The shape-bucket contract of the snapshot/engine split (DESIGN.md #10):
+    device tables whose row count depends on the DATA (tile tables, the
+    combined-order data segment, dense tiles) are padded to pow2 buckets,
+    and a rebuilt snapshot carries the old snapshot's buckets forward as
+    floors -- so replacing the data behind a warm engine presents identical
+    array shapes to every compiled program as long as the new index still
+    fits the bucket.
+    """
+    return 1 << (max(int(n), int(floor), 1) - 1).bit_length()
+
+
 def pad_axis0(a: np.ndarray, target: int, fill=0) -> np.ndarray:
     """Pad ``a`` along axis 0 to ``target`` rows with the sentinel ``fill``.
 

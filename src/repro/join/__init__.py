@@ -1,7 +1,12 @@
-# The online similarity query service (DESIGN.md #8): a persistent
-# device-resident index (build once, save/load across restarts) serving
-# batched epsilon range queries and kNN on top of the paper's grid join.
-from repro.join.index import SimilarityIndex  # noqa: F401
+# The online similarity query service (DESIGN.md #8, #10): a persistent
+# device-resident MUTABLE index (build once, save/load across restarts,
+# insert/delete/compact between requests) serving batched epsilon range
+# queries and kNN on top of the paper's grid join.
+from repro.join.index import (  # noqa: F401
+    IndexView,
+    PendingCompact,
+    SimilarityIndex,
+)
 from repro.join.service import (  # noqa: F401
     KnnResult,
     QueryService,

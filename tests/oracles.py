@@ -72,6 +72,67 @@ def brute_topk(q: np.ndarray, d: np.ndarray, k: int):
     return indices, distances
 
 
+class ChurnOracle:
+    """Brute-force mirror of the MUTABLE ``SimilarityIndex`` (DESIGN.md #10).
+
+    Tracks the live set under the same global-id contract as the index:
+    the seed dataset takes ids 0..n-1, ``insert`` allocates new ids upward,
+    ids are never recycled, and deleting an unknown or already-deleted id
+    raises ``KeyError``.  Queries answer over the live set only, with pair
+    and kNN results carrying GLOBAL ids.  The live set is kept sorted by
+    global id so ``brute_topk``'s tie-by-row-index equals the service's
+    tie-by-global-id.
+    """
+
+    def __init__(self, pts: np.ndarray):
+        pts = np.asarray(pts, np.float32)
+        self.live_ids = np.arange(pts.shape[0], dtype=np.int64)
+        self.live_pts = pts.copy()
+        self.next_id = pts.shape[0]
+
+    @property
+    def live_count(self) -> int:
+        return self.live_ids.shape[0]
+
+    def insert(self, pts: np.ndarray) -> np.ndarray:
+        pts = np.asarray(pts, np.float32)
+        ids = np.arange(self.next_id, self.next_id + pts.shape[0], dtype=np.int64)
+        self.next_id += pts.shape[0]
+        # new ids are the largest, so appending keeps the id-sorted order
+        self.live_ids = np.concatenate([self.live_ids, ids])
+        self.live_pts = np.concatenate([self.live_pts, pts])
+        return ids
+
+    def delete(self, ids) -> int:
+        ids = np.unique(np.asarray(ids, np.int64))
+        hit = np.isin(self.live_ids, ids)
+        if int(hit.sum()) != ids.shape[0]:
+            bad = ids[~np.isin(ids, self.live_ids)]
+            raise KeyError(f"cannot delete unknown or already-deleted ids {bad.tolist()}")
+        self.live_ids = self.live_ids[~hit]
+        self.live_pts = self.live_pts[~hit]
+        return int(ids.shape[0])
+
+    def range_count(self, q: np.ndarray, eps: float) -> np.ndarray:
+        return bipartite_counts(q, self.live_pts, eps)
+
+    def range_pairs(self, q: np.ndarray, eps: float) -> np.ndarray:
+        """(R, 2) int64 (query row, global id), lexsorted like the service."""
+        q64 = np.asarray(q, np.float64)
+        d64 = np.asarray(self.live_pts, np.float64)
+        d2 = ((q64[:, None, :] - d64[None, :, :]) ** 2).sum(-1)
+        qr, dr = np.nonzero(d2 <= np.float64(eps) ** 2)
+        pairs = np.column_stack([qr.astype(np.int64), self.live_ids[dr]])
+        srt = np.lexsort((pairs[:, 1], pairs[:, 0]))
+        return np.ascontiguousarray(pairs[srt])
+
+    def topk(self, q: np.ndarray, k: int):
+        """Exact kNN over the live set; indices are GLOBAL ids (-1 padded)."""
+        rows, distances = brute_topk(q, self.live_pts, k)
+        indices = np.where(rows >= 0, self.live_ids[np.clip(rows, 0, None)], -1)
+        return indices, distances
+
+
 def make_dataset(kind: str, n: int, dims: int, seed: int = 0) -> np.ndarray:
     """One generator for every distribution the test matrix exercises."""
     if kind == "uniform":

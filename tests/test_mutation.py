@@ -1,0 +1,389 @@
+"""The mutable index (DESIGN.md #10): delta inserts, tombstones, compaction.
+
+Correctness is differential against ``oracles.ChurnOracle`` (the brute-force
+mirror of the global-id contract) over every dataset kind in the shared
+matrix, both BEFORE and AFTER compaction; the refactor's operational
+contracts are pinned as hard counters:
+
+  * swap atomicity -- a ``compact()`` between requests changes NO answer bit
+    and, because executables are keyed by shape bucket rather than data
+    identity, adds ZERO traces (``ServiceStats.num_traces``);
+  * tombstone edges -- delete-everything, delete-then-reinsert identical
+    coordinates (new global id, same geometry), eps == 0 duplicate joins;
+  * save/load round-trips the full churn state (delta + tombstones +
+    id log), not just the snapshot;
+  * an interleaved insert/delete/compact/query stream (hypothesis-driven)
+    matches the oracle at every step.
+"""
+import numpy as np
+import pytest
+
+try:  # hypothesis is a dev-only dependency (see test_properties.py); the
+    # interleaved-stream property skips without it, but the deterministic
+    # stream test below keeps churn-sequence coverage either way
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from oracles import ChurnOracle, make_dataset, pair_set
+from repro.core import SelfJoinConfig
+from repro.join import QueryService, SimilarityIndex
+
+
+def _cfg(eps, **kw):
+    kw.setdefault("k", 4)
+    kw.setdefault("tile_size", 16)
+    kw.setdefault("dim_block", 8)
+    return SelfJoinConfig(eps=eps, **kw)
+
+
+def _queries(d, seed, n_extra=16):
+    """Mixed batch: dataset rows (exact hits, duplicates) + fresh points."""
+    extra = make_dataset("uniform", n_extra, d.shape[1], seed=seed)
+    return np.concatenate([d[: min(25, len(d))], extra])
+
+
+def _assert_matches_oracle(svc, oracle, q, eps, k=3):
+    """range_count + range_pairs + kNN all equal the churn oracle, bitwise."""
+    rc = svc.range_count(q, eps)
+    np.testing.assert_array_equal(rc.counts, oracle.range_count(q, eps))
+    rp = svc.range_pairs(q, eps)
+    np.testing.assert_array_equal(rp.pairs, oracle.range_pairs(q, eps))
+    np.testing.assert_array_equal(rp.counts, rc.counts)
+    kn = svc.knn(q, k)
+    want_idx, want_dist = oracle.topk(q, k)
+    np.testing.assert_array_equal(kn.indices, want_idx)
+    np.testing.assert_array_equal(kn.distances, want_dist)
+    return rc, rp, kn
+
+
+# -- differential matrix: every dataset kind, pre- and post-compact ----------
+
+
+def test_mutated_index_matches_churn_oracle(dataset_case):
+    name, d, eps = dataset_case
+    seed_pts, fresh = d[:-30], d[-30:]
+    idx = SimilarityIndex(seed_pts, _cfg(eps))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(seed_pts)
+    q = _queries(d, seed=81)
+
+    # inserts: points near the data (the held-out rows) plus exact
+    # duplicates of indexed rows (multiplicity under churn)
+    ins = np.concatenate([fresh, seed_pts[:5]])
+    np.testing.assert_array_equal(idx.insert(ins), oracle.insert(ins))
+    # deletes: a mix of seed ids (tombstones) and freshly inserted ids
+    # (delta-side removal)
+    dead = np.array(
+        [0, 3, len(seed_pts) // 2, len(seed_pts) + 2, len(seed_pts) + 31],
+        np.int64,
+    )
+    assert idx.delete(dead) == oracle.delete(dead) == len(dead)
+
+    assert idx.num_points == oracle.live_count
+    rc, _, _ = _assert_matches_oracle(svc, oracle, q, eps)
+    assert rc.stats.delta_size == idx.delta_size > 0
+    assert rc.stats.tombstone_count == idx.tombstone_count > 0
+    assert rc.stats.epoch == 0
+
+    # a smaller radius reuses the same snapshot; a larger one serves from a
+    # TEMPORARY rebuild, the resident build radius never moves
+    _assert_matches_oracle(svc, oracle, q, eps / 2)
+    over = svc.range_count(q, eps * 2)
+    np.testing.assert_array_equal(over.counts, oracle.range_count(q, eps * 2))
+    assert over.stats.index_rebuilds == 1
+    assert idx.index_eps == eps
+
+    # compaction folds the churn into a fresh snapshot: same answers, ids
+    # stable, churn buffers empty
+    idx.compact()
+    assert idx.epoch == 1
+    assert idx.delta_size == 0 and idx.tombstone_count == 0
+    assert idx.num_points == oracle.live_count
+    rc2, _, _ = _assert_matches_oracle(svc, oracle, q, eps)
+    assert rc2.stats.epoch == 1
+
+    # churn on top of the compacted index still matches
+    more = oracle.insert(fresh[:7])
+    np.testing.assert_array_equal(idx.insert(fresh[:7]), more)
+    idx.delete(more[:2])
+    oracle.delete(more[:2])
+    _assert_matches_oracle(svc, oracle, q, eps)
+
+
+# -- swap atomicity: bit-identical answers, zero traces ----------------------
+
+
+def test_compact_swap_is_atomic_zero_traces_and_bit_identical():
+    """The tentpole contract: executables are keyed by shape bucket, never
+    by data identity, so swapping in a compacted same-bucket snapshot
+    retraces NOTHING and changes NO answer bit -- counts, pairs (global
+    ids), and kNN all serve identically before, during, and after."""
+    d = make_dataset("exponential", 300, 8, seed=83)
+    idx = SimilarityIndex(d[:280], _cfg(0.3))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(d[:280])
+    q = _queries(d, seed=84)
+
+    # warm every executable: clean stream, then churn stream (aux passes)
+    _assert_matches_oracle(svc, oracle, q, 0.3, k=1)
+    idx.insert(d[280:])
+    oracle.insert(d[280:])
+    idx.delete(np.arange(0, 40, 3))
+    oracle.delete(np.arange(0, 40, 3))
+    before = _assert_matches_oracle(svc, oracle, q, 0.3, k=1)
+
+    traces0 = svc.total.num_traces
+    pending = idx.prepare_compact()  # build happens off the serving path
+    mid = _assert_matches_oracle(svc, oracle, q, 0.3, k=1)  # still epoch 0
+    assert mid[0].stats.epoch == 0
+    idx.apply_compact(pending)      # the atomic swap
+    after = _assert_matches_oracle(svc, oracle, q, 0.3, k=1)
+    assert after[0].stats.epoch == 1
+    assert after[0].stats.delta_size == 0
+    assert after[0].stats.tombstone_count == 0
+
+    for b, m, a in zip(before, mid, after):
+        for field in ("counts", "pairs", "indices", "distances"):
+            if hasattr(b, field):
+                np.testing.assert_array_equal(
+                    getattr(b, field), getattr(m, field)
+                )
+                np.testing.assert_array_equal(
+                    getattr(b, field), getattr(a, field)
+                )
+    assert svc.total.num_traces == traces0  # the swap retraced NOTHING
+
+
+def test_apply_compact_rejects_stale_pending():
+    d = make_dataset("uniform", 60, 6, seed=85)
+    idx = SimilarityIndex(d, _cfg(0.2))
+    pending = idx.prepare_compact()
+    idx.insert(d[:3])  # churn lands after the rebuild started
+    with pytest.raises(RuntimeError):
+        idx.apply_compact(pending)
+    idx.apply_compact(idx.prepare_compact())  # a fresh rebuild applies fine
+    assert idx.epoch == 1
+
+
+# -- tombstone edge cases ----------------------------------------------------
+
+
+def test_delete_everything_then_reinsert():
+    d = make_dataset("uniform", 50, 6, seed=86)
+    idx = SimilarityIndex(d, _cfg(0.2))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(d)
+    q = _queries(d, seed=87)
+
+    idx.delete(np.arange(50))
+    oracle.delete(np.arange(50))
+    assert idx.num_points == 0
+    assert (svc.range_count(q, 0.2).counts == 0).all()
+    assert svc.range_pairs(q, 0.2).pairs.shape == (0, 2)
+    kn = svc.knn(q, 3)
+    assert (kn.indices == -1).all() and np.isinf(kn.distances).all()
+
+    # reinserting serves delta-only (every snapshot point is tombstoned)
+    ids = idx.insert(d[:20])
+    oracle.insert(d[:20])
+    assert ids[0] == 50  # ids are never recycled
+    _assert_matches_oracle(svc, oracle, q, 0.2)
+
+    # compacting an all-tombstoned snapshot + delta still matches
+    idx.compact()
+    assert idx.num_points == oracle.live_count == 20
+    _assert_matches_oracle(svc, oracle, q, 0.2)
+
+
+def test_delete_then_reinsert_identical_coordinates():
+    d = make_dataset("duplicated", 60, 6, seed=88)
+    idx = SimilarityIndex(d, _cfg(0.1))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(d)
+    q = d[:12]
+
+    # delete a point, reinsert the SAME coordinates: geometry is restored
+    # but the pair ids must be the NEW global id, not the dead one
+    idx.delete([7])
+    oracle.delete([7])
+    new_id = int(idx.insert(d[7:8])[0])
+    assert int(oracle.insert(d[7:8])[0]) == new_id == 60
+    _, rp, _ = _assert_matches_oracle(svc, oracle, q, 0.1)
+    got_ids = set(rp.pairs[:, 1].tolist())
+    assert 7 not in got_ids and new_id in got_ids
+    idx.compact()
+    _assert_matches_oracle(svc, oracle, q, 0.1)
+
+
+def test_eps_zero_duplicate_join_under_churn():
+    d = make_dataset("duplicated", 45, 6, seed=89)
+    idx = SimilarityIndex(d, _cfg(0.0))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(d)
+    q = d[:10]
+
+    base = svc.range_count(q, 0.0).counts
+    np.testing.assert_array_equal(base, oracle.range_count(q, 0.0))
+    idx.delete([0])  # one member of a duplicate group
+    oracle.delete([0])
+    _assert_matches_oracle(svc, oracle, q, 0.0)
+    idx.insert(d[:1])  # an exact duplicate back, under a new id
+    oracle.insert(d[:1])
+    rc, _, _ = _assert_matches_oracle(svc, oracle, q, 0.0)
+    np.testing.assert_array_equal(rc.counts, base)  # multiplicity restored
+
+
+def test_delete_validation():
+    d = make_dataset("uniform", 30, 6, seed=90)
+    idx = SimilarityIndex(d, _cfg(0.2))
+    with pytest.raises(KeyError):
+        idx.delete([30])  # never allocated
+    idx.delete([4])
+    with pytest.raises(KeyError):
+        idx.delete([4])  # already dead
+    ids = idx.insert(d[:2])
+    idx.delete(ids[:1])
+    with pytest.raises(KeyError):
+        idx.delete(ids[:1])  # delta ids die too
+    assert idx.num_points == 30
+
+
+# -- persistence of churn state ----------------------------------------------
+
+
+def test_save_load_roundtrips_churn_state(tmp_path):
+    d = make_dataset("clustered", 160, 8, seed=91)
+    idx = SimilarityIndex(d[:140], _cfg(0.25))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(d[:140])
+    q = _queries(d, seed=92)
+    idx.insert(d[140:])
+    oracle.insert(d[140:])
+    idx.delete([1, 17, 141])
+    oracle.delete([1, 17, 141])
+    idx.compact()
+    ids = idx.insert(d[:6])
+    oracle.insert(d[:6])
+    idx.delete(ids[2:4])
+    oracle.delete(ids[2:4])
+    want = _assert_matches_oracle(svc, oracle, q, 0.25)
+
+    loaded = SimilarityIndex.load(idx.save(tmp_path / "churn.idx"))
+    assert loaded.epoch == idx.epoch == 1
+    assert loaded.delta_size == idx.delta_size
+    assert loaded.tombstone_count == idx.tombstone_count
+    assert loaded.num_points == idx.num_points
+    svc2 = QueryService(loaded)
+    got = _assert_matches_oracle(svc2, oracle, q, 0.25)
+    for w, g in zip(want, got):
+        for field in ("counts", "pairs", "indices", "distances"):
+            if hasattr(w, field):
+                np.testing.assert_array_equal(getattr(w, field), getattr(g, field))
+
+    # the reloaded index keeps allocating ids where the original left off
+    np.testing.assert_array_equal(loaded.insert(d[:1]), idx.insert(d[:1]))
+    loaded.compact()
+    oracle.insert(d[:1])
+    _assert_matches_oracle(QueryService(loaded), oracle, q, 0.25)
+
+
+# -- interleaved stream property ---------------------------------------------
+
+
+_STREAM_DIMS = 4
+_STREAM_POOL = make_dataset("uniform", 200, _STREAM_DIMS, seed=93)
+_STREAM_OPS = ["insert", "delete", "compact", "count", "pairs", "knn"]
+
+
+def _run_stream_step(idx, svc, oracle, q, op, draw_int, draw_ids):
+    """One interleaved-stream operation, checked against the oracle.
+
+    ``draw_int(lo, hi)`` and ``draw_ids(live_count)`` abstract the choice
+    source so the hypothesis property and the deterministic seeded stream
+    share one body.
+    """
+    if op == "insert":
+        lo = draw_int(0, 190)
+        m = draw_int(1, 10)
+        pts = _STREAM_POOL[lo : lo + m]
+        np.testing.assert_array_equal(idx.insert(pts), oracle.insert(pts))
+    elif op == "delete" and oracle.live_count:
+        ids = oracle.live_ids[draw_ids(oracle.live_count)]
+        assert idx.delete(ids) == oracle.delete(ids)
+    elif op == "compact":
+        idx.compact()
+        assert idx.delta_size == 0 and idx.tombstone_count == 0
+    elif op == "count":
+        np.testing.assert_array_equal(
+            svc.range_count(q, 0.3).counts, oracle.range_count(q, 0.3)
+        )
+    elif op == "pairs":
+        assert pair_set(svc.range_pairs(q, 0.3).pairs) == pair_set(
+            oracle.range_pairs(q, 0.3)
+        )
+    elif op == "knn":
+        kn = svc.knn(q, 3)
+        want_idx, want_dist = oracle.topk(q, 3)
+        np.testing.assert_array_equal(kn.indices, want_idx)
+        np.testing.assert_array_equal(kn.distances, want_dist)
+    assert idx.num_points == oracle.live_count
+
+
+def test_deterministic_interleaved_stream_matches_oracle():
+    """A long seeded insert/delete/compact/query stream (always runs, even
+    where hypothesis is unavailable) matches the oracle at every step."""
+    rng = np.random.default_rng(94)
+    base = _STREAM_POOL[:40]
+    idx = SimilarityIndex(base, _cfg(0.3))
+    svc = QueryService(idx)
+    oracle = ChurnOracle(base)
+    q = _STREAM_POOL[40:52]
+
+    def draw_int(lo, hi):
+        return int(rng.integers(lo, hi + 1))
+
+    def draw_ids(live):
+        m = int(rng.integers(1, min(8, live) + 1))
+        return rng.choice(live, size=m, replace=False)
+
+    for step in range(40):
+        op = _STREAM_OPS[int(rng.integers(0, len(_STREAM_OPS)))]
+        _run_stream_step(idx, svc, oracle, q, op, draw_int, draw_ids)
+    _assert_matches_oracle(svc, oracle, q, 0.3)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(data=st.data())
+    def test_interleaved_churn_stream_matches_oracle(data):
+        """Any interleaving of insert / delete / compact / query operations
+        answers exactly like the brute-force churn oracle at every step."""
+        base = _STREAM_POOL[:40]
+        idx = SimilarityIndex(base, _cfg(0.3))
+        svc = QueryService(idx)
+        oracle = ChurnOracle(base)
+        q = _STREAM_POOL[40:52]
+
+        def draw_int(lo, hi):
+            return data.draw(st.integers(lo, hi))
+
+        def draw_ids(live):
+            pick = data.draw(
+                st.lists(
+                    st.integers(0, live - 1),
+                    min_size=1,
+                    max_size=min(8, live),
+                    unique=True,
+                )
+            )
+            return np.asarray(pick)
+
+        n_ops = data.draw(st.integers(3, 8), label="n_ops")
+        for step in range(n_ops):
+            op = data.draw(st.sampled_from(_STREAM_OPS), label=f"op{step}")
+            _run_stream_step(idx, svc, oracle, q, op, draw_int, draw_ids)
+        _assert_matches_oracle(svc, oracle, q, 0.3)
