@@ -24,8 +24,9 @@ bench-engine:
 # balance on the indexed engine, the query-service warm-QPS/compile-reuse
 # pass, the dense-vs-indexed crossover sweep, and the churn-stream
 # delta-vs-rebuild pass) so no tier can silently rot between PRs.
-# bench_comm/bench_dense/bench_service/bench_mutation also drop
-# BENCH_*.json into BENCH_OUT_DIR (default .bench_out) for bench-compare.
+# bench_comm/bench_dense/bench_service/bench_mutation/bench_scaling also
+# drop BENCH_*.json into BENCH_OUT_DIR (default .bench_out) for
+# bench-compare (bench_scaling runs in the compare step itself).
 bench-smoke:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
@@ -41,6 +42,7 @@ bench-compare:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_mutation.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_scaling.py
 	PYTHONPATH=src:. $(PYTHON) benchmarks/compare.py
 
 # Regenerate the committed baselines in-place (run on a quiet machine,
@@ -50,6 +52,7 @@ bench-baseline:
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_service.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_mutation.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_scaling.py
 
 quickstart:
 	PYTHONPATH=src $(PYTHON) examples/quickstart.py

@@ -71,14 +71,16 @@ def run_fused(tiny: bool = False):
     n, dims = (1_500, 16) if tiny else (12_000, 16)
     contracts: dict = {
         "count_parity": True,           # asserted inside the subprocess
+        "pairs_parity": True,           # fused pair SET == host-driven SET
         "fused_traces": 1,
         "fused_dispatches_per_join": 1,
+        "fused_pairs_traces": 1,
+        "fused_pairs_dispatches_per_join": 1,
     }
     metrics: dict = {}
     info: dict = {"n": n, "dims": dims, "tiny": tiny}
-    for p, fused_us, host_us, host_disp, cand in measure_fused_vs_host(
-        n, dims, [8]
-    ):
+    count_rows, pairs_rows = measure_fused_vs_host(n, dims, [8])
+    for p, fused_us, host_us, host_disp, cand in count_rows:
         filter_ratio = cand / float(n * n)
         record(
             f"fused_ring/Syn{dims}D/p={p}", fused_us,
@@ -92,6 +94,22 @@ def run_fused(tiny: bool = False):
         metrics[f"host_us/p={p}"] = host_us
         info[f"host_dispatches/p={p}"] = host_disp
         info[f"speedup_vs_host/p={p}"] = round(host_us / fused_us, 2)
+    for p, fp_us, hp_us, retries, npairs in pairs_rows:
+        record(
+            f"fused_pairs/Syn{dims}D/p={p}", fp_us,
+            f"host_pairs_us={hp_us:.1f};"
+            f"speedup_vs_host={hp_us / fp_us:.2f};"
+            f"overflow_retries={retries};num_pairs={npairs}",
+        )
+        # the capacity/rank-window seeding must keep warm joins retry-free,
+        # and the one-dispatch pairs ring must beat the |p|^2-block host
+        # loop at p=8 (the acceptance row for DESIGN.md #7b)
+        contracts[f"pair_overflow_retries/p={p}"] = retries
+        contracts[f"fused_pairs_faster/p={p}"] = bool(fp_us < hp_us)
+        metrics[f"fused_pairs_us/p={p}"] = fp_us
+        metrics[f"host_pairs_us/p={p}"] = hp_us
+        info[f"num_pairs/p={p}"] = npairs
+        info[f"pairs_speedup_vs_host/p={p}"] = round(hp_us / fp_us, 2)
     emit_bench_json("fused", contracts=contracts, metrics=metrics, info=info)
 
 

@@ -6,10 +6,14 @@ near-ideal scaling up to 128 -- entity partitioning makes batch costs
 near-equal, so max-load ~ total/|p|.
 
 ``run_fused_vs_host`` adds *measured* rows for the distributed engine's two
-drivers (DESIGN.md #7): host-driven BSP loop vs the device-fused ring, on
-|p| in {1, 2, 4, 8} simulated devices -- the per-|p| dispatch overhead the
-fusion removes grows with |p| (the host loop re-enters Python |p| times per
-round x chunk programs; the fused ring is one dispatch regardless of |p|).
+drivers (DESIGN.md #7): host-driven BSP loop vs the device-fused ring, in
+both counts and pairs mode, on |p| in {1, 2, 4, 8} simulated devices -- the
+per-|p| dispatch overhead the fusion removes grows with |p| (the host loop
+re-enters Python |p| times per round x chunk programs; the fused ring is
+one dispatch regardless of |p|).  It emits ``BENCH_scaling.json`` for the
+regression gate: host dispatch counts, zero-retry pairs joins, and the
+LPT-vs-round-robin load balance of the deterministic cost model are
+contracts; the per-|p| warm wall times are slack-gated metrics.
 """
 from __future__ import annotations
 
@@ -18,16 +22,24 @@ import os
 
 import numpy as np
 
-from benchmarks.common import measure_fused_vs_host, record
-from repro.core import simulate_scaling
+from benchmarks.common import emit_bench_json, measure_fused_vs_host, record
+from repro.core import DistributedSelfJoinEngine, SelfJoinConfig, simulate_scaling
+from repro.data import exponential_dataset
 from benchmarks.bench_partition_balance import OUT as TIMES_FILE, run as _gen
 
 
 def run_fused_vs_host(tiny: bool = False):
     n, dims = (1_500, 16) if tiny else (8_000, 16)
-    for p, fused_us, host_us, host_disp, cand in measure_fused_vs_host(
-        n, dims, [1, 2, 4, 8]
-    ):
+    contracts: dict = {
+        "count_parity": True,
+        "pairs_parity": True,
+        "fused_dispatches_per_join": 1,
+        "fused_pairs_dispatches_per_join": 1,
+    }
+    metrics: dict = {}
+    info: dict = {"n": n, "dims": dims, "tiny": tiny}
+    count_rows, pairs_rows = measure_fused_vs_host(n, dims, [1, 2, 4, 8])
+    for p, fused_us, host_us, host_disp, cand in count_rows:
         record(
             f"fig11/fused_vs_host/p={p}", fused_us,
             f"host_us={host_us:.1f};"
@@ -35,6 +47,36 @@ def run_fused_vs_host(tiny: bool = False):
             f"fused_dispatches=1;host_dispatches={host_disp};"
             f"filter_ratio={cand / float(n * n):.4f}",
         )
+        # chunk-program launch counts are deterministic for a fixed dataset:
+        # drift means the schedule (not the machine) changed
+        contracts[f"host_dispatches/p={p}"] = host_disp
+        metrics[f"fused_us/p={p}"] = fused_us
+        metrics[f"host_us/p={p}"] = host_us
+    for p, fp_us, hp_us, retries, npairs in pairs_rows:
+        record(
+            f"fig11/fused_pairs_vs_host/p={p}", fp_us,
+            f"host_pairs_us={hp_us:.1f};"
+            f"speedup_vs_host={hp_us / fp_us:.2f};"
+            f"overflow_retries={retries};num_pairs={npairs}",
+        )
+        contracts[f"pair_overflow_retries/p={p}"] = retries
+        metrics[f"fused_pairs_us/p={p}"] = fp_us
+        metrics[f"host_pairs_us/p={p}"] = hp_us
+        info[f"num_pairs/p={p}"] = npairs
+
+    # rr-vs-LPT: the deterministic cost model's worker loads (paper Sec. 6.2)
+    # -- LPT over the estimated batch costs may never balance WORSE than
+    # round-robin on the fixed benchmark dataset
+    D = exponential_dataset(n, dims, seed=5)
+    cfg = SelfJoinConfig(eps=0.06, k=4, tile_size=16)
+    rr = DistributedSelfJoinEngine(D, cfg, num_workers=8).worker_loads()
+    lpt = DistributedSelfJoinEngine(
+        D, cfg, num_workers=8, assignment="dynamic"
+    ).worker_loads()
+    contracts["lpt_max_load_le_rr/p=8"] = bool(lpt.max() <= rr.max())
+    info["rr_balance/p=8"] = round(float(rr.max() / rr.mean()), 3)
+    info["lpt_balance/p=8"] = round(float(lpt.max() / lpt.mean()), 3)
+    emit_bench_json("scaling", contracts=contracts, metrics=metrics, info=info)
 
 
 def run():

@@ -88,23 +88,51 @@ _FUSED_VS_HOST_SCRIPT = textwrap.dedent(
         fused_us = (time.perf_counter() - t0) * 1e6
         assert fused_eng.fused_traces == 1, "fused ring retraced"
         assert fused_res.stats.num_device_dispatches == 1
+
+        # pairs mode (DESIGN.md #7b): the same two drivers materializing the
+        # full pair list; the fused ring packs it in ONE device dispatch
+        host_pr = host_eng.self_join_pairs()   # warm the chunk programs
+        t0 = time.perf_counter()
+        host_pr = host_eng.self_join_pairs()
+        host_pairs_us = (time.perf_counter() - t0) * 1e6
+        fused_pr = fused_eng.self_join_pairs() # pack reuse + trace + run
+        assert (set(map(tuple, fused_pr.pairs.tolist()))
+                == set(map(tuple, host_pr.pairs.tolist()))), p
+        t0 = time.perf_counter()
+        fused_pr = fused_eng.self_join_pairs() # warm: converged (cap, hit_cap)
+        fused_pairs_us = (time.perf_counter() - t0) * 1e6
+        assert fused_eng.fused_pairs_traces == 1, "fused pairs retraced"
+        assert fused_pr.stats.num_device_dispatches == 1
+        assert fused_pr.stats.overflow_retries == 0
+
         print("ROW", p, fused_us, host_us,
               host_res.stats.num_device_dispatches,
               host_res.stats.num_candidates, flush=True)
+        print("PROW", p, fused_pairs_us, host_pairs_us,
+              fused_pr.stats.overflow_retries, len(fused_pr.pairs), flush=True)
     """
 )
 
 
 def measure_fused_vs_host(
     n: int, dims: int, workers: Sequence[int], timeout: int = 1800
-) -> List[Tuple[int, float, float, int, int]]:
+) -> Tuple[
+    List[Tuple[int, float, float, int, int]],
+    List[Tuple[int, float, float, int, int]],
+]:
     """Warm fused vs host-driven join times on |p|-device meshes.
 
-    Returns ``[(p, fused_us, host_us, host_dispatches, candidates)]`` where
-    ``candidates`` is the point-comparison volume the grid index actually
-    evaluated (filter ratio = candidates / n^2, deterministic for a fixed
-    dataset); the subprocess asserts count parity and the fused
-    one-trace / one-dispatch contract.
+    Returns ``(count_rows, pairs_rows)``:
+
+    - ``count_rows``: ``[(p, fused_us, host_us, host_dispatches,
+      candidates)]`` where ``candidates`` is the point-comparison volume the
+      grid index actually evaluated (filter ratio = candidates / n^2,
+      deterministic for a fixed dataset);
+    - ``pairs_rows``: ``[(p, fused_pairs_us, host_pairs_us,
+      overflow_retries, num_pairs)]`` for the pair-materializing mode.
+
+    The subprocess asserts count AND pair-set parity plus the fused
+    one-trace / one-dispatch / zero-retry contracts.
     """
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     out = subprocess.run(
@@ -119,7 +147,7 @@ def measure_fused_vs_host(
         raise RuntimeError(
             f"fused-vs-host subprocess failed:\n{out.stderr[-2000:]}"
         )
-    rows = []
+    rows, prows = [], []
     for line in out.stdout.splitlines():
         if line.startswith("ROW "):
             _, p, fused_us, host_us, host_disp, cand = line.split()
@@ -127,7 +155,13 @@ def measure_fused_vs_host(
                 (int(p), float(fused_us), float(host_us), int(host_disp),
                  int(cand))
             )
-    return rows
+        elif line.startswith("PROW "):
+            _, p, fp_us, hp_us, retries, npairs = line.split()
+            prows.append(
+                (int(p), float(fp_us), float(hp_us), int(retries),
+                 int(npairs))
+            )
+    return rows, prows
 
 
 def record(name: str, us_per_call: float, derived: str = ""):

@@ -44,6 +44,21 @@ per-round tile evaluation is device code.  Two drivers share that contract:
     trace, one dispatch per join; eps stays a traced scalar so an eps sweep
     re-executes the same program.
 
+Fused pairs mode (DESIGN.md #7b): ``self_join_pairs(fused=True)`` runs the
+same one-program ring, but the per-round chunk body is
+``engine.pairs_chunk_step`` -- each worker compacts its matched (global
+query id, global data id) rows into a preallocated per-worker buffer at a
+running cursor that is part of the ring carry, so the cursor (and the
+per-chunk max-hit watermark) survives across ``ppermute`` rounds.  The ids
+are decoded inside the program through a combined (query | shard) order
+table: the query half is packed per (worker, round); the shard half --
+``tile_start`` and grid-sort permutation, both pre-offset to global ids --
+rides the ring payload next to the shard tile tables.  Overflow accounting
+is exact (the cursor advances by true hit counts even past capacity), so
+the host retries the one dispatch with a widened rank window or a regrown
+buffer, and the retry is rare: capacity is seeded from
+``suggest_pairs_capacity`` over the fleet-max per-worker estimate.
+
 Unequal shards from a non-divisible |D| need no sentinel padding on the
 host-driven path (shard tile tables are per-shard anyway); the fused path
 pads every table to the fleet-wide maximum -- padded tiles carry length 0,
@@ -52,6 +67,7 @@ query slots scatter to an out-of-range sentinel dropped by ``mode="drop"``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Tuple, Union
 
 import jax
@@ -59,9 +75,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import batching as batching_mod
 from repro.core import compat
 from repro.core.distributed import ring_comm_elements, ring_scan
-from repro.core.engine import SelfJoinEngine, count_chunk_step
+from repro.core.engine import (
+    _MAX_AUTO_GROW,
+    SelfJoinEngine,
+    _count_chunk_program,
+    _pairs_chunk_program,
+    count_chunk_step,
+    pairs_chunk_step,
+)
 from repro.core.grid import adjacent_cell_pairs, build_grid, pad_axis0
 from repro.core.partition import EntityPartition, assign_dynamic, make_partition
 from repro.core.reorder import variance_reorder
@@ -74,6 +98,25 @@ from repro.core.types import (
 from repro.kernels import ops
 
 AxisNames = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass
+class DistributedKnnResult:
+    """k nearest neighbours per dataset point, exact, global ids.
+
+    ``indices[i, :]`` are the ids of the k nearest points to point i
+    (self included, ties broken by id), -1 padded when k exceeds the
+    dataset; ``distances`` are the matching float64 Euclidean distances,
+    inf padded.  ``stats`` is the final candidate pass's
+    ``SelfJoinStats``.
+    """
+
+    indices: np.ndarray      # (n, k) int64
+    distances: np.ndarray    # (n, k) float64
+    counts: np.ndarray       # (n,) int64 neighbour counts at eps_used
+    eps_used: float          # final radius of the adaptive expansion
+    eps_rounds: int          # candidate passes run (1 = no growth)
+    stats: SelfJoinStats
 
 
 def _mesh_workers(mesh, axes: AxisNames) -> int:
@@ -170,8 +213,10 @@ class DistributedSelfJoinEngine:
         # fused-ring state (built lazily on the first fused count)
         self.fused = bool(fused)
         self._fused_pack = None       # packed tables + compiled program
-        self.fused_traces = 0         # times the fused program was traced
+        self.fused_traces = 0         # times the fused count program was traced
         self.fused_executions = 0     # times it was executed
+        self.fused_pairs_traces = 0      # fused pairs-program traces
+        self.fused_pairs_executions = 0  # fused pairs-program executions
 
     # -- partitioning -----------------------------------------------------
 
@@ -276,6 +321,10 @@ class DistributedSelfJoinEngine:
         max_pr = max((qp.num_pairs for qp in flat), default=0)
         chunk = max(1, min(eng.count_chunk, max(max_pr, 1)))
         n_chunks = max(-(-max_pr // chunk), 1)
+        chunk_p = max(1, min(eng.pairs_chunk, max(max_pr, 1)))
+        n_chunks_p = max(-(-max_pr // chunk_p), 1)
+        shard_sizes = np.diff(self.shard_bounds)
+        max_sn = max(int(shard_sizes.max()) if shard_sizes.size else 0, 1)
 
         qt = np.zeros((p, p, max_qt, t, n_pad), np.float32)
         qstart = np.zeros((p, p, max_qt), np.int32)
@@ -286,9 +335,27 @@ class DistributedSelfJoinEngine:
         real = np.zeros((p, p, n_chunks), np.int32)
         dt = np.zeros((p, max_dt, t, n_pad), np.float32)
         dlen = np.zeros((p, max_dt), np.int32)
+        # pairs-mode tables (DESIGN.md #7b): the same plans re-chunked at the
+        # pairs granularity, plus the global-id decode tables -- the query
+        # half (qog) indexed per (worker, round), the shard half (dstart,
+        # dord, already offset to global ids) riding the ring payload
+        qog = np.zeros((p, p, max_nq), np.int32)
+        pqp = np.zeros((p, p, n_chunks_p, chunk_p), np.int32)
+        pdp = np.zeros((p, p, n_chunks_p, chunk_p), np.int32)
+        realp = np.zeros((p, p, n_chunks_p), np.int32)
+        dstart = np.zeros((p, max_dt), np.int32)
+        dord = np.zeros((p, max_sn), np.int32)
 
         for j, e in enumerate(self.shards):
             dt[j], dlen[j] = e.snapshot.packed_tile_table(max_dt)
+            if e.snapshot.plan is not None:
+                dstart[j] = pad_axis0(
+                    e.snapshot.plan.tile_start.astype(np.int32), max_dt
+                )
+            if e.snapshot.grid is not None:
+                dord[j, : shard_sizes[j]] = (
+                    self.shard_bounds[j] + e.snapshot.grid.point_order
+                ).astype(np.int32)
 
         stats_pairs_total = stats_pairs_eval = stats_candidates = 0
         for k in range(p):
@@ -307,12 +374,20 @@ class DistributedSelfJoinEngine:
                     qlen[k, r] = pad_axis0(len_kr, max_qt)
                     qstart[k, r] = pad_axis0(qp.q_tile_start, max_qt)
                 qord[k, r, : nq[k]] = qp.q_order.astype(np.int32)
+                # pairs decode: q-sorted position -> GLOBAL query id
+                qog[k, r, : nq[k]] = q_index[k][qp.q_order].astype(np.int32)
                 if qp.num_pairs:
                     pq[k, r].reshape(-1)[: qp.num_pairs] = qp.pair_q
                     # B side indexes the concatenated [query | shard] table
                     pd[k, r].reshape(-1)[: qp.num_pairs] = qp.pair_d + max_qt
                     real[k, r] = np.clip(
                         qp.num_pairs - np.arange(n_chunks) * chunk, 0, chunk
+                    ).astype(np.int32)
+                    pqp[k, r].reshape(-1)[: qp.num_pairs] = qp.pair_q
+                    pdp[k, r].reshape(-1)[: qp.num_pairs] = qp.pair_d + max_qt
+                    realp[k, r] = np.clip(
+                        qp.num_pairs - np.arange(n_chunks_p) * chunk_p,
+                        0, chunk_p,
                     ).astype(np.int32)
 
         axes_t = (self.axes,) if isinstance(self.axes, str) else tuple(self.axes)
@@ -357,6 +432,51 @@ class DistributedSelfJoinEngine:
         def pspec(arr):
             return P(ax, *([None] * (arr.ndim - 1)))
 
+        # pairs capacity seeding: hit-rate sample on the heaviest (k, r)
+        # block (small explicit chunk -- the default 4096-pair padding would
+        # dwarf the sample), scaled by each worker's total candidate volume
+        best_kr = None
+        for k in range(p):
+            for r in range(p):
+                qp = qplans[k][r]
+                if qp is not None and qp.num_pairs and (
+                    best_kr is None
+                    or qp.num_pairs > qplans[best_kr[0]][best_kr[1]].num_pairs
+                ):
+                    best_kr = (k, r)
+        hit_rate = 0.0
+        if best_kr is not None:
+            k0, r0 = best_kr
+            qp = qplans[k0][r0]
+            j0 = (k0 - r0) % p
+            n_s = min(qp.num_pairs, 512)
+            rng = np.random.default_rng(0)
+            sel = (
+                rng.choice(qp.num_pairs, size=n_s, replace=False)
+                if qp.num_pairs > n_s else np.arange(n_s)
+            )
+            len_c = np.concatenate([qlen[k0, r0], dlen[j0]])
+            counts_s, _ = ops.tile_counts(
+                np.concatenate([qt[k0, r0], dt[j0]], axis=0), len_c,
+                qp.pair_q[sel], qp.pair_d[sel] + max_qt,
+                eps=eps, dim_block=cfg.dim_block, shortc=cfg.shortc,
+                backend=backend, chunk=min(n_s, 512), interpret=interpret,
+            )
+            cand_s = float(
+                (len_c[qp.pair_q[sel]].astype(np.float64)
+                 * len_c[qp.pair_d[sel] + max_qt]).sum()
+            )
+            hit_rate = float(counts_s.sum()) / max(cand_s, 1.0)
+        pairs_est = [
+            int(np.ceil(hit_rate * sum(
+                qp.num_candidates for qp in qplans[k] if qp is not None
+            )))
+            for k in range(p)
+        ]
+        pairs_cap = batching_mod.suggest_pairs_capacity(
+            max(pairs_est, default=0), eng.pairs_headroom
+        )
+
         # tables go device-resident (with their ring sharding) at pack time:
         # repeat joins and eps sweeps then transfer only the eps scalar
         args = tuple(
@@ -375,10 +495,89 @@ class DistributedSelfJoinEngine:
                 check_rep=not cfg.use_pallas,
             )
         )
+
+        pairs_extra = tuple(
+            jax.device_put(a, NamedSharding(self.mesh, pspec(a)))
+            for a in (qog, pqp, pdp, realp, dstart, dord)
+        )
+        pairs_args = (
+            args[0], args[1], args[2],                               # qt qstart qlen
+            pairs_extra[0], pairs_extra[1], pairs_extra[2], pairs_extra[3],
+            args[7], args[8],                                        # dt dlen
+            pairs_extra[4], pairs_extra[5],                          # dstart dord
+        )
+        pairs_in_specs = tuple(pspec(a) for a in pairs_args) + (P(),)
+
+        def make_pairs_fn(cap: int, hit_cap: int):
+            """One-program fused pairs ring, compiled for (cap, hit_cap).
+
+            Same transport as the count program, but the ring carry is the
+            per-worker (buffer, cursor, max-chunk-hits) triple of
+            ``pairs_chunk_step`` and the payload additionally rotates the
+            shard-side decode tables.  Programs are cached per (cap,
+            hit_cap) by the caller; a non-overflowing join uses exactly one.
+            """
+
+            def local_pairs(qt, qstart, qlen, qog, pqp, pdp, realp,
+                            dt, dlen, dstart, dord, eps_in):
+                engine_self.fused_pairs_traces += 1
+                qt, qstart, qlen, qog = qt[0], qstart[0], qlen[0], qog[0]
+                pqp, pdp, realp = pqp[0], pdp[0], realp[0]
+                dt, dlen, dstart, dord = dt[0], dlen[0], dstart[0], dord[0]
+
+                def round_body(r, carry, payload):
+                    d_tiles, d_len, d_start, d_ord = payload
+                    tiles = jnp.concatenate([qt[r], d_tiles], axis=0)
+                    tlen = jnp.concatenate([qlen[r], d_len])
+                    # combined (query | shard) position space: B-side starts
+                    # offset past the query slots, ids decode through the
+                    # concatenated order table to GLOBAL point ids
+                    tstart = jnp.concatenate([qstart[r], d_start + max_nq])
+                    order = jnp.concatenate([qog[r], d_ord])
+
+                    def chunk_body(c, carry2):
+                        return pairs_chunk_step(
+                            *carry2, tiles, tlen, tstart, order,
+                            pqp[r, c], pdp[r, c], realp[r, c], eps_in,
+                            hit_cap=hit_cap, dim_block=cfg.dim_block,
+                            backend=backend, interpret=interpret,
+                        )
+
+                    return jax.lax.fori_loop(0, n_chunks_p, chunk_body, carry)
+
+                carry0 = (
+                    compat.pvary(
+                        jnp.zeros((cap + hit_cap, 2), jnp.int32), axes_t
+                    ),
+                    compat.pvary(jnp.zeros((), jnp.int32), axes_t),
+                    compat.pvary(jnp.zeros((), jnp.int32), axes_t),
+                )
+                buf, off, mh = ring_scan(
+                    axes_t, round_body, carry0, (dt, dlen, dstart, dord)
+                )
+                return buf[None], off[None], mh[None]
+
+            return jax.jit(
+                compat.shard_map(
+                    local_pairs,
+                    mesh=self.mesh,
+                    in_specs=pairs_in_specs,
+                    out_specs=(P(ax, None, None), P(ax), P(ax)),
+                    check_rep=not cfg.use_pallas,
+                )
+            )
+
         self._fused_pack = dict(
             eps=float(eps), fn=fn, args=args,
             q_index=q_index, nq=nq, n_chunks=n_chunks,
             stats=(stats_pairs_total, stats_pairs_eval, stats_candidates),
+            pairs_args=pairs_args, make_pairs_fn=make_pairs_fn,
+            pairs_fns={},                       # (cap, hit_cap) -> compiled fn
+            pairs_cap=pairs_cap, pairs_est=pairs_est,
+            n_chunks_p=n_chunks_p,
+            pairs_flat_per_chunk=chunk_p * t * t,
+            # expected hits in one full pairs chunk, for rank-window seeding
+            pairs_hit_est=int(np.ceil(hit_rate * chunk_p * t * t)),
         )
         return self._fused_pack
 
@@ -424,6 +623,259 @@ class DistributedSelfJoinEngine:
             e.snapshot.grid.num_cells for e in self.shards if e.snapshot.grid
         )
         return SelfJoinResult(counts=counts, stats=stats)
+
+    def _index_stats(self, stats: SelfJoinStats) -> SelfJoinStats:
+        stats.num_tiles = sum(
+            e.snapshot.plan.num_tiles for e in self.shards if e.snapshot.plan
+        )
+        stats.num_nonempty_cells = sum(
+            e.snapshot.grid.num_cells for e in self.shards if e.snapshot.grid
+        )
+        return stats
+
+    def _dense_candidates(self, nq: List[int]) -> int:
+        shard_sizes = np.diff(self.shard_bounds)
+        return int(
+            sum(
+                nq[k] * shard_sizes[j]
+                for sched in self.ring_schedule()
+                for k, j in sched
+            )
+        )
+
+    def _pairs_fused(
+        self, eps: float, max_pairs: Optional[int] = None
+    ) -> SelfJoinResult:
+        """One-dispatch fused ring pairs join (DESIGN.md #7b).
+
+        Every worker fills its own (capacity + hit_cap, 2) buffer inside the
+        single ``shard_map`` program; the per-worker cursors and max-chunk
+        hit watermarks come back with the buffers, so overflow is detected
+        exactly on the host.  The retry ladder mirrors
+        ``SelfJoinEngine.pairs``: widen the per-chunk rank window first
+        (compaction correctness), then regrow the buffer to the measured
+        fleet-max |R_k| (auto mode only; an explicit ``max_pairs`` raises).
+        Each (cap, hit_cap) compiles once and is cached in the pack, so a
+        non-overflowing join costs one trace and one dispatch.
+        """
+        pack = self._fused_pack
+        if pack is None or eps > pack["eps"]:
+            pack = self._pack_fused(max(eps, self.config.eps))
+        eng = self.engine_config or EngineConfig()
+        p = self.num_workers
+        explicit = max_pairs if max_pairs is not None else eng.max_pairs
+        auto = explicit is None
+        cap = pack["pairs_cap"] if auto else int(explicit)
+        flat_per_chunk = pack["pairs_flat_per_chunk"]
+        # rank-window seed: 4x the sampled expected per-chunk hits absorbs
+        # chunk-to-chunk skew, so the first join rarely needs the widen retry
+        hit_cap = min(
+            flat_per_chunk,
+            max(4096, -(-4 * pack["pairs_hit_est"] // 1024) * 1024),
+        )
+        warm = pack.get("pairs_warm")
+        if warm is not None:  # converged settings of an earlier join: 0 retries
+            hit_cap = max(hit_cap, warm[1])
+            if auto:
+                cap = max(cap, warm[0])
+
+        retries = 0
+        while True:
+            key = (cap, hit_cap)
+            fn = pack["pairs_fns"].get(key)
+            if fn is None:
+                fn = pack["make_pairs_fn"](cap, hit_cap)
+                pack["pairs_fns"][key] = fn
+            buf, off, mh = fn(*pack["pairs_args"], jnp.float32(eps))
+            self.fused_pairs_executions += 1
+            off_np = np.asarray(jax.device_get(off)).astype(np.int64)
+            mh_np = np.asarray(jax.device_get(mh)).astype(np.int64)
+            max_off = int(off_np.max()) if off_np.size else 0
+            max_mh = int(mh_np.max()) if mh_np.size else 0
+            # exact totals are known after the one dispatch, so each
+            # overflow kind resolves in one retry (same ladder as
+            # SelfJoinEngine.pairs)
+            if max_mh > hit_cap:
+                if retries >= _MAX_AUTO_GROW:
+                    raise RuntimeError(
+                        f"fused pairs rank window did not converge "
+                        f"(max chunk hits {max_mh} > hit_cap {hit_cap})"
+                    )
+                hit_cap = min(flat_per_chunk, -(-max_mh // 1024) * 1024)
+                retries += 1
+                continue
+            if max_off > cap:
+                if auto and eng.auto_grow and retries < _MAX_AUTO_GROW:
+                    cap = batching_mod.suggest_pairs_capacity(max_off, 1.0)
+                    retries += 1
+                    continue
+                raise RuntimeError(
+                    f"fused ring worker found {max_off} pairs, exceeding "
+                    f"max_pairs={cap}; raise the cap or lower eps"
+                )
+            if auto:
+                pack["pairs_warm"] = (cap, hit_cap)
+            break
+
+        buf_np = np.asarray(jax.device_get(buf))
+        parts = [buf_np[k, : off_np[k]] for k in range(p)]
+        pairs = (
+            np.concatenate(parts) if parts else np.zeros((0, 2), np.int32)
+        ).astype(np.int32)
+        counts = np.zeros(self.num_points, dtype=np.int64)
+        if pairs.shape[0]:
+            counts = np.bincount(
+                pairs[:, 0], minlength=self.num_points
+            ).astype(np.int64)
+        pairs_total, pairs_eval, candidates = pack["stats"]
+        stats = SelfJoinStats(
+            num_points=self.num_points,
+            num_dims=self.num_dims,
+            k=min(self.config.k, self.num_dims),
+            num_workers=p,
+            num_rounds=p,
+            comm_elements=self.comm_elements(),
+            num_tile_pairs_total=pairs_total,
+            num_tile_pairs_evaluated=pairs_eval,
+            num_candidates=candidates,
+            num_chunks=p * pack["n_chunks_p"],
+            num_device_dispatches=1 + retries,
+            pairs_capacity=cap,
+            overflow_retries=retries,
+            worker_pair_cursors=tuple(int(x) for x in off_np),
+            worker_max_chunk_hits=tuple(int(x) for x in mh_np),
+            num_candidates_dense=self._dense_candidates(pack["nq"]),
+            num_results=int(pairs.shape[0]),
+        )
+        return SelfJoinResult(
+            counts=counts, stats=self._index_stats(stats), pairs=pairs
+        )
+
+    def _block_pairs(
+        self,
+        k: int,
+        j: int,
+        q_pts_k: np.ndarray,
+        eps: float,
+        eng: EngineConfig,
+        stats: SelfJoinStats,
+    ) -> np.ndarray:
+        """Exact (global query id, global data id) pairs of one (Q_k, E_j)
+        block, via the host-driven count-then-pairs pattern of the serving
+        tier: the count pass sizes the buffer exactly, so the pairs pass
+        never overflows (only the per-chunk rank window may widen)."""
+        e = self.shards[j]
+        tab = e.prepare_query(q_pts_k, eps)
+        if tab is None:
+            return np.zeros((0, 2), np.int64)
+        cfg = self.config
+        backend = ops.backend_name(tab.execution, cfg.use_pallas)
+        shortc = cfg.shortc and tab.execution == "indexed"
+
+        counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
+        skipped = jnp.zeros((), jnp.int32)
+        for pa, pb, real in tab.chunks(eng.count_chunk):
+            counts_sorted, skipped = _count_chunk_program(
+                counts_sorted, skipped,
+                tab.tiles, tab.tile_len, tab.tile_start,
+                pa, pb, real, jnp.float32(eps),
+                dim_block=cfg.dim_block, shortc=shortc,
+                backend=backend, interpret=eng.interpret,
+            )
+            stats.num_device_dispatches += 1
+        total = int(np.asarray(counts_sorted.sum()))
+
+        t = cfg.tile_size
+        flat_per_chunk = eng.pairs_chunk * t * t
+        hit_cap = min(flat_per_chunk, 4096)
+        cap = 1 << (max(total, 1) - 1).bit_length()  # pow2: bounded trace keys
+        for _ in range(_MAX_AUTO_GROW + 1):
+            buf = jnp.zeros((cap + hit_cap, 2), jnp.int32)
+            offset = jnp.zeros((), jnp.int32)
+            max_hits = jnp.zeros((), jnp.int32)
+            for pa, pb, real in tab.chunks(eng.pairs_chunk):
+                buf, offset, max_hits = _pairs_chunk_program(
+                    buf, offset, max_hits,
+                    tab.tiles, tab.tile_len, tab.tile_start, tab.order,
+                    pa, pb, real, jnp.float32(eps),
+                    hit_cap=hit_cap, dim_block=cfg.dim_block,
+                    backend=backend, interpret=eng.interpret,
+                )
+                stats.num_device_dispatches += 1
+                stats.num_chunks += 1
+            if int(max_hits) <= hit_cap:
+                break
+            hit_cap = min(
+                flat_per_chunk, 1 << (int(max_hits) - 1).bit_length()
+            )
+        num = int(offset)
+        if num != total:
+            raise RuntimeError(
+                f"block ({k}, {j}) pairs pass found {num} pairs but the "
+                f"count pass said {total}"
+            )
+        stats.num_tile_pairs_total += tab.qplan.num_tile_pairs_total
+        stats.num_tile_pairs_evaluated += tab.num_pairs
+        stats.num_candidates += tab.num_candidates
+
+        blk = np.asarray(buf[:num]).astype(np.int64)
+        if num:
+            # order decodes A-side to q-row ids, B-side to shard-local ids
+            blk[:, 0] = self.worker_query_index(k)[blk[:, 0]]
+            blk[:, 1] += self.shard_bounds[j]
+        return blk
+
+    def _pairs_host(
+        self, eps: float, max_pairs: Optional[int] = None
+    ) -> SelfJoinResult:
+        """Host-driven BSP pairs join: the fused path's differential oracle.
+
+        Same |p|-round schedule as ``count()``, each (worker, shard) block
+        materialized through the chunked pairs program and decoded to
+        global ids on the host.  Exact by construction (count-first
+        sizing); an explicit ``max_pairs`` below the true |R| raises, for
+        API symmetry with the fused path.
+        """
+        eng = self.engine_config or EngineConfig()
+        stats = SelfJoinStats(
+            num_points=self.num_points,
+            num_dims=self.num_dims,
+            k=min(self.config.k, self.num_dims),
+            num_workers=self.num_workers,
+            comm_elements=self.comm_elements(),
+        )
+        q_index = [self.worker_query_index(k) for k in range(self.num_workers)]
+        q_points = [self._pts[idx] for idx in q_index]
+        blocks = []
+        for round_sched in self.ring_schedule():
+            for k, j in round_sched:
+                if q_index[k].size == 0:
+                    continue
+                blocks.append(
+                    self._block_pairs(k, j, q_points[k], eps, eng, stats)
+                )
+            stats.num_rounds += 1
+        pairs = (
+            np.concatenate(blocks) if blocks else np.zeros((0, 2), np.int64)
+        ).astype(np.int32)
+        explicit = max_pairs if max_pairs is not None else eng.max_pairs
+        if explicit is not None and pairs.shape[0] > int(explicit):
+            raise RuntimeError(
+                f"result exceeded max_pairs={int(explicit)}; raise the cap "
+                f"or lower eps"
+            )
+        counts = np.zeros(self.num_points, dtype=np.int64)
+        if pairs.shape[0]:
+            counts = np.bincount(
+                pairs[:, 0], minlength=self.num_points
+            ).astype(np.int64)
+        stats.num_results = int(pairs.shape[0])
+        stats.num_candidates_dense = self._dense_candidates(
+            [idx.size for idx in q_index]
+        )
+        return SelfJoinResult(
+            counts=counts, stats=self._index_stats(stats), pairs=pairs
+        )
 
     # -- queries ----------------------------------------------------------
 
@@ -479,3 +931,112 @@ class DistributedSelfJoinEngine:
         )
         stats.num_results = int(counts.sum())
         return SelfJoinResult(counts=counts, stats=stats)
+
+    def self_join_pairs(
+        self,
+        eps: Optional[float] = None,
+        max_pairs: Optional[int] = None,
+        fused: Optional[bool] = None,
+    ) -> SelfJoinResult:
+        """Counts plus the materialized (a, b) pair list, GLOBAL ids.
+
+        Distributed analogue of ``SelfJoinEngine.pairs``: both (a, b) and
+        (b, a) appear, as does (a, a); ``counts`` equals ``count()``.
+        ``fused=None`` follows the engine's construction mode; ``fused=
+        False`` forces the host-driven BSP loop (the differential oracle)
+        even on a fused engine; ``fused=True`` requires one.  The fused
+        path is one device dispatch per non-overflowing join
+        (``_pairs_fused``); the host path is |p|^2 blocks of
+        count-then-pairs dispatches.  Pair order differs between the two
+        paths (per-worker ring order vs schedule order) -- the pair SET is
+        identical.
+        """
+        eps = self.config.eps if eps is None else float(eps)
+        use_fused = self.fused if fused is None else bool(fused)
+        if use_fused and not self.fused:
+            raise ValueError(
+                "fused=True requires an engine constructed with fused=True "
+                "(a mesh-backed ring)"
+            )
+        if use_fused and self.num_points:
+            return self._pairs_fused(eps, max_pairs)
+        return self._pairs_host(eps, max_pairs)
+
+    def knn(
+        self,
+        k_neighbors: int,
+        eps0: Optional[float] = None,
+        fused: Optional[bool] = None,
+    ) -> DistributedKnnResult:
+        """Exact k nearest neighbours of every dataset point, global ids.
+
+        Adaptive eps expansion over the distributed pairs join (the same
+        Hybrid-KNN-join recipe as ``QueryService.knn``): run the candidate
+        pass at a starting radius (``eps0``, default the build radius),
+        double until every point holds >= min(k, n) candidates (capped at
+        the bounding-box diagonal, where everything is a candidate), then
+        take the exact per-point top-k by (distance, id) from the final
+        pair list.  ``fused`` routes the candidate passes exactly as in
+        ``self_join_pairs`` -- the fused ring makes each pass one device
+        dispatch.
+        """
+        k = int(k_neighbors)
+        if k < 0:
+            raise ValueError(f"k_neighbors must be >= 0, got {k}")
+        n = self.num_points
+        indices = np.full((n, k), -1, np.int64)
+        distances = np.full((n, k), np.inf, np.float64)
+        if n == 0 or k == 0:
+            return DistributedKnnResult(
+                indices=indices, distances=distances,
+                counts=np.zeros(n, np.int64), eps_used=0.0, eps_rounds=0,
+                stats=SelfJoinStats(
+                    num_points=n, num_dims=self.num_dims,
+                    num_workers=self.num_workers,
+                ),
+            )
+        k_eff = min(k, n)
+        lo = self._pts.min(axis=0).astype(np.float64)
+        hi = self._pts.max(axis=0).astype(np.float64)
+        eps_cap = float(np.sqrt(((hi - lo) ** 2).sum())) * (1.0 + 2**-10) + 1e-6
+        eps = self.config.eps if eps0 is None else float(eps0)
+        if eps <= 0.0:  # an eps==0 start would never grow by doubling
+            eps = eps_cap / 1024.0
+        eps = min(eps, eps_cap)
+        rounds = 0
+        while True:
+            res = self.self_join_pairs(eps=eps, fused=fused)
+            rounds += 1
+            if (res.counts >= k_eff).all() or eps >= eps_cap:
+                break
+            eps = min(2.0 * eps, eps_cap)
+        indices, distances = self._topk_from_pairs(res.pairs, k)
+        return DistributedKnnResult(
+            indices=indices, distances=distances, counts=res.counts,
+            eps_used=eps, eps_rounds=rounds, stats=res.stats,
+        )
+
+    def _topk_from_pairs(
+        self, pairs: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact per-point top-k over the candidate pairs, float64 distances."""
+        n = self.num_points
+        indices = np.full((n, k), -1, np.int64)
+        distances = np.full((n, k), np.inf, np.float64)
+        if pairs.shape[0] == 0:
+            return indices, distances
+        qi = pairs[:, 0].astype(np.int64)
+        di = pairs[:, 1].astype(np.int64)
+        diffs = self._pts[qi].astype(np.float64) - self._pts[di].astype(
+            np.float64
+        )
+        dist = np.sqrt((diffs * diffs).sum(axis=1))
+        order = np.lexsort((di, dist, qi))
+        qi, di, dist = qi[order], di[order], dist[order]
+        seg = np.cumsum(np.bincount(qi, minlength=n))
+        starts = np.concatenate([[0], seg[:-1]])
+        rank = np.arange(qi.shape[0]) - starts[qi]
+        keep = rank < k
+        indices[qi[keep], rank[keep]] = di[keep]
+        distances[qi[keep], rank[keep]] = dist[keep]
+        return indices, distances

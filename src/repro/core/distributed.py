@@ -17,7 +17,7 @@ schedules the independent ops concurrently).
 This module owns the **ring transport**: ``ring_scan`` runs the |p| BSP
 supersteps as a ``fori_loop`` whose body consumes an arbitrary *pytree*
 payload and whose epilogue ``ppermute``-rotates that payload to the next
-ring position.  Two payload flavours ride on it:
+ring position.  Three payload flavours ride on it:
 
   * the dense reference below (``make_ring_counts_fn``): the payload is the
     raw point block and the local join is a blocked brute-force count --
@@ -25,10 +25,16 @@ ring position.  Two payload flavours ride on it:
     candidate filtering, and is kept for transport measurement
     (`benchmarks/bench_comm.py`) and as the end-to-end ``shard_map``
     correctness oracle;
-  * the production path (``core/dist_engine.py`` with ``fused=True``,
-    DESIGN.md #7): the payload is the shard's padded *tile table*
+  * the production count path (``core/dist_engine.py`` with ``fused=True``,
+    DESIGN.md #7a): the payload is the shard's padded *tile table*
     (tiles, tile lengths) and the body is the chunked indexed count
-    program -- the whole join is one compiled device program.
+    program -- the whole join is one compiled device program;
+  * the pairs path (``self_join_pairs(fused=True)``, DESIGN.md #7b): the
+    payload additionally rotates the shard's decode tables (tile starts
+    and the global-id grid-sort permutation) and the carry is each
+    worker's (pairs buffer, cursor, max-chunk-hits) compaction state, so
+    matched (query id, data id) rows accumulate across rounds inside the
+    same one program.
 
 Works unchanged on a 1-axis mesh ("data") or the joint ("pod","data") axes of
 the production mesh -- the ring simply spans both (inter-pod DCI hops occur

@@ -151,7 +151,12 @@ def pairs_chunk_step(
     serves the engine.  For a *bipartite* chunk, ``point_order`` is the
     combined (query | data) position->original-id map and ``tile_start`` the
     combined position table of ``SelfJoinEngine.prepare_query`` -- A-side
-    rows then decode to query ids and B-side rows to data ids.
+    rows then decode to query ids and B-side rows to data ids.  The fused
+    distributed ring (``core/dist_engine.py``) runs this same body inside
+    its one ``shard_map`` program: the (buf, offset, max_chunk_hits) triple
+    becomes the per-worker ring carry and the decode tables are traced
+    values rotating through ``ppermute``, so nothing here may assume
+    host-side (concrete) inputs.
 
     Compaction is rank-select, not scatter (scatter over the full C*T*T
     mask serializes badly on CPU XLA): a row-wise prefix sum over the hit

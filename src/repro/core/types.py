@@ -92,6 +92,10 @@ class SelfJoinStats:
     overflow_retries: int = 0            # auto-grow retries in pairs mode (engine)
     num_workers: int = 0                 # |p| (distributed engine)
     num_rounds: int = 0                  # ring rounds executed (= |p|)
+    worker_pair_cursors: tuple = ()      # per-worker final pairs-buffer cursor
+                                         # (exact pairs found, even past capacity)
+    worker_max_chunk_hits: tuple = ()    # per-worker largest per-chunk hit count
+                                         # (> hit_cap means the rank window clipped)
     num_device_dispatches: int = 0       # host->device chunk-program launches
                                          # per join (fused ring: exactly 1)
     num_candidates_dense: int = 0        # |Q| x |E| sum a dense ring pass would do

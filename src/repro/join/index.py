@@ -133,6 +133,7 @@ class SimilarityIndex:
         engine_config: Optional[EngineConfig] = None,
         *,
         k_candidates: Optional[Sequence[int]] = None,
+        auto_compact_fraction: Optional[float] = None,
     ):
         pts = np.ascontiguousarray(np.asarray(d, dtype=np.float32))
         if k_candidates is not None and pts.shape[0] > 2:
@@ -142,6 +143,11 @@ class SimilarityIndex:
                 tile_size=config.tile_size,
             )
             config = dataclasses.replace(config, k=k)
+        if auto_compact_fraction is not None and auto_compact_fraction <= 0:
+            raise ValueError(
+                f"auto_compact_fraction must be > 0, "
+                f"got {auto_compact_fraction}"
+            )
         self.engine = SelfJoinEngine(pts, config, engine_config)
         n = pts.shape[0]
         self._init_churn_state(
@@ -149,6 +155,7 @@ class SimilarityIndex:
             id_pts=pts.copy(),
             next_id=n,
             epoch=0,
+            auto_compact_fraction=auto_compact_fraction,
         )
 
     def _init_churn_state(
@@ -160,8 +167,16 @@ class SimilarityIndex:
         delta_ids: Optional[np.ndarray] = None,
         delta_pts: Optional[np.ndarray] = None,
         dead_ids: Optional[np.ndarray] = None,
+        auto_compact_fraction: Optional[float] = None,
     ) -> None:
         n_dims = self.engine.num_dims
+        # delta-buffer spill policy: when set, insert() auto-compacts once
+        # the delta outgrows this fraction of the snapshot (DESIGN.md #10)
+        self.auto_compact_fraction = (
+            None if auto_compact_fraction is None
+            else float(auto_compact_fraction)
+        )
+        self.auto_compactions = 0     # spill-policy-triggered compactions
         self._snap_ids = np.asarray(snap_ids, np.int64)      # ascending
         self._id_pts = np.asarray(id_pts, np.float32)        # (next_id, n) log
         self._next_id = int(next_id)
@@ -320,7 +335,11 @@ class SimilarityIndex:
         The points land in the delta buffer -- no grid rebuild, no compiled
         program invalidated -- and are visible to the very next query (the
         service dense-joins the delta against every batch).  ``compact()``
-        eventually folds them into a fresh snapshot.
+        eventually folds them into a fresh snapshot; with
+        ``auto_compact_fraction`` set, that happens here automatically once
+        the delta outgrows that fraction of the snapshot (the spill
+        policy), so answers before and after the spill stay bit-identical
+        by the compaction contract.
         """
         pts = np.ascontiguousarray(np.asarray(points, dtype=np.float32))
         if pts.ndim != 2 or pts.shape[1] != self.num_dims:
@@ -336,7 +355,20 @@ class SimilarityIndex:
         self._delta_pts = np.concatenate([self._delta_pts, pts])
         self._next_id += m
         self._bump()
+        self._maybe_auto_compact()
         return ids
+
+    def _maybe_auto_compact(self) -> None:
+        """The delta-buffer spill policy: compact when the delta outgrows
+        ``auto_compact_fraction`` of the snapshot (floor 1 row, so an index
+        born empty still converges instead of thrashing)."""
+        frac = self.auto_compact_fraction
+        if frac is None:
+            return
+        threshold = frac * max(int(self._snap_ids.shape[0]), 1)
+        if self.delta_size > threshold:
+            self.apply_compact(self.prepare_compact())
+            self.auto_compactions += 1
 
     def delete(self, ids) -> int:
         """Delete live points by global id; returns how many were removed.
@@ -490,6 +522,7 @@ class SimilarityIndex:
             "has_index": snap.grid is not None,
             "epoch": self.epoch,
             "next_id": self._next_id,
+            "auto_compact_fraction": self.auto_compact_fraction,
         }
         arrays = {
             "pts": snap.pts,
@@ -557,5 +590,8 @@ class SimilarityIndex:
                 delta_ids=z["delta_ids"],
                 delta_pts=z["delta_pts"],
                 dead_ids=z["dead_ids"],
+                # additive meta key: absent in version-2 saves from before
+                # the spill policy existed
+                auto_compact_fraction=meta.get("auto_compact_fraction"),
             )
         return self

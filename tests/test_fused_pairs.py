@@ -1,0 +1,265 @@
+"""Fused ring PAIRS mode (DESIGN.md #7b): materialized pair lists inside
+the one-program distributed join.
+
+Parity matrix: for every dataset kind in the shared correctness matrix the
+fused pair SET must equal the host-driven BSP loop (``fused=False``, the
+differential oracle), the single-device ``SelfJoinEngine.pairs``, and the
+brute-force oracle -- exactly.  A non-overflowing join is one trace and one
+device dispatch; the per-worker cursors account for every emitted pair.
+
+The overflow protocol is exercised whitebox (shrinking the packed capacity
+forces the grow-and-retry ladder mid-ring) and blackbox (a tiny explicit
+``max_pairs`` raises on both the fused and host paths).  The 8-device
+matrix runs in a subprocess (the device-count flag must precede jax init);
+in-process tests cover the 1-device mesh.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from oracles import brute_counts, brute_pairs, brute_topk, make_dataset, pair_set
+from repro.core import (
+    DistributedSelfJoinEngine,
+    SelfJoinConfig,
+    SelfJoinEngine,
+)
+
+
+def _mesh1():
+    import jax
+
+    return jax.make_mesh((1,), ("data",))
+
+
+def _cfg(eps, **kw):
+    kw.setdefault("k", 4)
+    kw.setdefault("tile_size", 16)
+    return SelfJoinConfig(eps=eps, **kw)
+
+
+def test_fused_pairs_parity_matrix_one_device(dataset_case):
+    name, data, eps = dataset_case
+    cfg = _cfg(eps)
+    de = DistributedSelfJoinEngine(data, cfg, mesh=_mesh1(), fused=True)
+    res = de.self_join_pairs()
+    truth = pair_set(brute_pairs(data, eps))
+    assert pair_set(res.pairs) == truth, name
+    np.testing.assert_array_equal(res.counts, brute_counts(data, eps))
+    # the two distributed paths and the single-device engine agree on the SET
+    # (emission order differs: per-worker ring order vs schedule order)
+    assert pair_set(de.self_join_pairs(fused=False).pairs) == truth, name
+    assert pair_set(SelfJoinEngine(data, cfg).pairs().pairs) == truth, name
+    # non-overflowing fused join: one trace, one dispatch, cursors exact
+    assert de.fused_pairs_traces == 1, name
+    assert res.stats.num_device_dispatches == 1
+    assert res.stats.overflow_retries == 0
+    assert sum(res.stats.worker_pair_cursors) == res.stats.num_results
+    assert res.stats.num_results == len(truth)
+
+
+def test_fused_pairs_warm_reuse_and_eps_sweep():
+    d = make_dataset("exponential", 403, 16, seed=5)
+    de = DistributedSelfJoinEngine(d, _cfg(0.06), mesh=_mesh1(), fused=True)
+    first = de.self_join_pairs()
+    assert de.fused_pairs_traces == 1 and de.fused_pairs_executions == 1
+    # warm repeat and an eps sweep at or below the packed radius re-execute
+    # the SAME compiled program: no retrace, no repack, no retry
+    again = de.self_join_pairs()
+    assert pair_set(again.pairs) == pair_set(first.pairs)
+    small = de.self_join_pairs(eps=0.03)
+    assert pair_set(small.pairs) == pair_set(brute_pairs(d, 0.03))
+    assert de.fused_pairs_traces == 1 and de.fused_pairs_executions == 3
+    assert again.stats.num_device_dispatches == 1
+    assert small.stats.num_device_dispatches == 1
+
+
+def test_fused_pairs_overflow_retry_mid_ring():
+    # whitebox: shrink the packed auto capacity below |R_k| so the single
+    # fused dispatch overflows; the exact fleet-max cursor is known after
+    # the pass, so the ladder regrows once and the retry is exact
+    d = make_dataset("clustered", 301, 8, seed=7)
+    de = DistributedSelfJoinEngine(d, _cfg(0.25), mesh=_mesh1(), fused=True)
+    de.count()  # builds the fused pack (capacity estimate included)
+    truth = pair_set(brute_pairs(d, 0.25))
+    assert len(truth) > 64
+    de._fused_pack["pairs_cap"] = 64
+    de._fused_pack.pop("pairs_warm", None)
+    res = de.self_join_pairs()
+    assert res.stats.overflow_retries >= 1
+    assert res.stats.num_device_dispatches == 1 + res.stats.overflow_retries
+    assert res.stats.pairs_capacity >= len(truth)
+    assert pair_set(res.pairs) == truth
+    # the converged (cap, hit_cap) is remembered: the next join is clean
+    warm = de.self_join_pairs()
+    assert warm.stats.overflow_retries == 0
+    assert warm.stats.num_device_dispatches == 1
+
+
+def test_explicit_max_pairs_raises_on_both_paths():
+    d = make_dataset("uniform", 200, 8, seed=11)
+    de = DistributedSelfJoinEngine(d, _cfg(0.3), mesh=_mesh1(), fused=True)
+    total = len(brute_pairs(d, 0.3))
+    assert total > 8
+    with pytest.raises(RuntimeError, match="max_pairs=8"):
+        de.self_join_pairs(max_pairs=8)
+    with pytest.raises(RuntimeError, match="max_pairs=8"):
+        de.self_join_pairs(max_pairs=8, fused=False)
+    # a sufficient explicit cap succeeds on both paths
+    ok = de.self_join_pairs(max_pairs=2 * total)
+    assert len(ok.pairs) == total
+    assert len(de.self_join_pairs(max_pairs=total, fused=False).pairs) == total
+
+
+def test_eps_zero_duplicated_points():
+    d = make_dataset("duplicated", 90, 6, seed=3)
+    de = DistributedSelfJoinEngine(d, _cfg(0.0, k=3, tile_size=8), mesh=_mesh1(), fused=True)
+    res = de.self_join_pairs()
+    truth = pair_set(brute_pairs(d, 0.0))
+    assert pair_set(res.pairs) == truth
+    # duplicate groups make multiplicities > 1 even at radius zero
+    assert len(truth) > d.shape[0]
+
+
+@pytest.mark.parametrize("kind,n,dims,eps", [
+    ("uniform", 1, 5, 0.1),          # single point: only the self pair
+    ("constant_dims", 120, 6, 0.2),  # degenerate dimensions
+])
+def test_fused_pairs_edge_cases_one_device(kind, n, dims, eps):
+    d = make_dataset(kind, n, dims, seed=3)
+    de = DistributedSelfJoinEngine(
+        d, _cfg(eps, k=3, tile_size=8, dim_block=8), mesh=_mesh1(), fused=True
+    )
+    assert pair_set(de.self_join_pairs().pairs) == pair_set(brute_pairs(d, eps))
+
+
+def test_fused_knn_matches_brute_topk():
+    d = make_dataset("clustered", 160, 8, seed=13)
+    de = DistributedSelfJoinEngine(d, _cfg(0.05), mesh=_mesh1(), fused=True)
+    res = de.knn(5)
+    ti, td = brute_topk(d, d, 5)
+    np.testing.assert_array_equal(res.indices, ti)
+    np.testing.assert_allclose(res.distances, td, rtol=0, atol=0)
+    assert res.eps_rounds >= 1
+    # k > |D|: unreachable slots pad with -1 / +inf
+    tiny = make_dataset("uniform", 3, 4, seed=2)
+    tres = DistributedSelfJoinEngine(
+        tiny, _cfg(0.1, k=2, tile_size=8), mesh=_mesh1(), fused=True
+    ).knn(5)
+    ti, td = brute_topk(tiny, tiny, 5)
+    np.testing.assert_array_equal(tres.indices, ti)
+    np.testing.assert_allclose(tres.distances, td, rtol=0, atol=0)
+
+
+def test_knn_k_zero_and_invalid():
+    d = make_dataset("uniform", 32, 4, seed=1)
+    de = DistributedSelfJoinEngine(d, _cfg(0.1, k=2, tile_size=8), mesh=_mesh1(), fused=True)
+    res = de.knn(0)
+    assert res.indices.shape == (32, 0) and res.eps_rounds == 0
+    with pytest.raises(ValueError, match=">= 0"):
+        de.knn(-1)
+
+
+def test_fused_true_requires_fused_engine():
+    d = make_dataset("uniform", 64, 4, seed=1)
+    host = DistributedSelfJoinEngine(d, _cfg(0.1, k=2), num_workers=4)
+    with pytest.raises(ValueError, match="fused=True"):
+        host.self_join_pairs(fused=True)
+    # the host path itself works fine on the same engine
+    assert pair_set(host.self_join_pairs().pairs) == pair_set(brute_pairs(d, 0.1))
+
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    sys.path.insert(0, sys.argv[2])
+    import numpy as np, jax
+    from oracles import DATASET_CASES, brute_pairs, brute_topk, make_dataset, pair_set
+    from repro.core import DistributedSelfJoinEngine, SelfJoinConfig
+
+    mesh = jax.make_mesh((8,), ("data",))
+
+    # every dataset kind, fused on the real 8-ring vs the brute oracle;
+    # the heaviest case additionally checks both assignments against the
+    # host-driven BSP loop (the differential oracle)
+    for name, data, eps in DATASET_CASES:
+        cfg = SelfJoinConfig(eps=eps, k=4, tile_size=16)
+        truth = pair_set(brute_pairs(data, eps))
+        assignments = (
+            ("round_robin", "dynamic") if name == "exp16" else ("dynamic",)
+        )
+        for assignment in assignments:
+            eng = DistributedSelfJoinEngine(
+                data, cfg, mesh=mesh, assignment=assignment, fused=True
+            )
+            res = eng.self_join_pairs()
+            tag = f"{name}/{assignment}"
+            assert pair_set(res.pairs) == truth, f"{tag}: fused != brute"
+            assert eng.fused_pairs_traces == 1, f"{tag}: retraced"
+            assert res.stats.num_device_dispatches == 1, tag
+            assert res.stats.overflow_retries == 0, tag
+            assert sum(res.stats.worker_pair_cursors) == len(truth), tag
+            assert res.stats.num_workers == 8 and res.stats.num_rounds == 8
+            if name == "exp16":
+                host = eng.self_join_pairs(fused=False)
+                assert pair_set(host.pairs) == truth, f"{tag}: host != brute"
+                np.testing.assert_array_equal(res.counts, host.counts)
+
+    # workers with zero query batches and empty shards (|D| < |p|)
+    tiny = make_dataset("uniform", 5, 4, seed=4)
+    tcfg = SelfJoinConfig(eps=0.3, k=2, tile_size=8)
+    teng = DistributedSelfJoinEngine(tiny, tcfg, mesh=mesh, fused=True)
+    tres = teng.self_join_pairs()
+    ttruth = pair_set(brute_pairs(tiny, 0.3))
+    assert pair_set(tres.pairs) == ttruth, "tiny: fused != brute"
+    assert pair_set(teng.self_join_pairs(fused=False).pairs) == ttruth
+
+    # eps == 0 with duplicated points, on the real ring
+    dup = make_dataset("duplicated", 90, 6, seed=3)
+    deng = DistributedSelfJoinEngine(
+        dup, SelfJoinConfig(eps=0.0, k=3, tile_size=8), mesh=mesh, fused=True
+    )
+    assert pair_set(deng.self_join_pairs().pairs) == pair_set(brute_pairs(dup, 0.0))
+
+    # explicit cap overflow raises from inside the one-program ring
+    data = DATASET_CASES[0][1]
+    eng = DistributedSelfJoinEngine(
+        data, SelfJoinConfig(eps=DATASET_CASES[0][2], k=4, tile_size=16),
+        mesh=mesh, fused=True,
+    )
+    try:
+        eng.self_join_pairs(max_pairs=8)
+    except RuntimeError as e:
+        assert "max_pairs=8" in str(e)
+    else:
+        raise AssertionError("tiny max_pairs did not raise on the fused path")
+
+    # distributed kNN routes through the fused pairs join and stays exact
+    d = make_dataset("clustered", 160, 8, seed=13)
+    kres = DistributedSelfJoinEngine(
+        d, SelfJoinConfig(eps=0.05, k=4, tile_size=16), mesh=mesh, fused=True
+    ).knn(5)
+    ti, td = brute_topk(d, d, 5)
+    assert np.array_equal(kres.indices, ti)
+    assert np.array_equal(kres.distances, td)
+    print("FUSED_PAIRS_OK")
+    """
+)
+
+
+def test_fused_pairs_8_devices():
+    here = os.path.dirname(__file__)
+    src = os.path.join(here, "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src, here],
+        capture_output=True, text=True, timeout=600,
+        env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "FUSED_PAIRS_OK" in out.stdout

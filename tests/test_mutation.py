@@ -290,6 +290,55 @@ def test_save_load_roundtrips_churn_state(tmp_path):
     _assert_matches_oracle(QueryService(loaded), oracle, q, 0.25)
 
 
+# -- delta-buffer spill policy -----------------------------------------------
+
+
+def test_auto_compact_spill_policy_fires_and_answers_identical(tmp_path):
+    """With ``auto_compact_fraction`` set, an insert stream crosses the
+    spill threshold and compaction fires inside ``insert`` (epoch
+    advances, delta drains) while every answer stays bit-identical to the
+    churn oracle and to a twin index without the policy."""
+    d = make_dataset("clustered", 160, 6, seed=37)
+    pool = make_dataset("uniform", 120, 6, seed=38)
+    eps = 0.25
+    idx = SimilarityIndex(d, _cfg(eps), auto_compact_fraction=0.25)
+    twin = SimilarityIndex(d, _cfg(eps))  # same stream, no spill policy
+    svc, twin_svc = QueryService(idx), QueryService(twin)
+    oracle = ChurnOracle(d)
+    q = _queries(d, seed=39)
+
+    fired = False
+    for lo in range(0, len(pool), 20):
+        batch = pool[lo : lo + 20]
+        np.testing.assert_array_equal(idx.insert(batch), oracle.insert(batch))
+        twin.insert(batch)
+        if not fired and idx.auto_compactions:
+            fired = True
+            # the spill folded the delta into a fresh snapshot
+            assert idx.delta_size == 0 and idx.epoch >= 1
+        # the policy bounds the delta at every step of the stream
+        assert idx.delta_size <= 0.25 * idx.num_points
+        rc, rp, _ = _assert_matches_oracle(svc, oracle, q, eps)
+        trc = twin_svc.range_count(q, eps)
+        np.testing.assert_array_equal(rc.counts, trc.counts)
+        np.testing.assert_array_equal(
+            rp.pairs, twin_svc.range_pairs(q, eps).pairs
+        )
+    assert fired and idx.auto_compactions >= 1
+    assert twin.epoch == 0 and twin.auto_compactions == 0
+    assert idx.delta_size < twin.delta_size == len(pool)
+
+    # the policy survives save/load and keeps firing afterwards
+    loaded = SimilarityIndex.load(idx.save(tmp_path / "spill.idx"))
+    assert loaded.auto_compact_fraction == 0.25
+    epoch0 = loaded.epoch
+    loaded.insert(make_dataset("uniform", 120, 6, seed=40))
+    assert loaded.epoch > epoch0 and loaded.auto_compactions >= 1
+
+    with pytest.raises(ValueError, match="auto_compact_fraction"):
+        SimilarityIndex(d, _cfg(eps), auto_compact_fraction=0.0)
+
+
 # -- interleaved stream property ---------------------------------------------
 
 
