@@ -2,7 +2,7 @@
 
 PYTHON ?= python
 
-.PHONY: install ci test test-8dev bench-engine bench-smoke bench-compare bench-baseline quickstart serve-demo
+.PHONY: install ci test test-8dev bench-engine bench-smoke bench-compare bench-baseline quickstart serve-demo trace-demo
 
 install:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -24,9 +24,11 @@ bench-engine:
 # balance on the indexed engine, the query-service warm-QPS/compile-reuse
 # pass, the dense-vs-indexed crossover sweep, and the churn-stream
 # delta-vs-rebuild pass) so no tier can silently rot between PRs.
-# bench_comm/bench_dense/bench_service/bench_mutation/bench_scaling also
-# drop BENCH_*.json into BENCH_OUT_DIR (default .bench_out) for
-# bench-compare (bench_scaling runs in the compare step itself).
+# bench_comm/bench_partition_balance/bench_dense/bench_service/
+# bench_mutation/bench_scaling also drop BENCH_*.json into BENCH_OUT_DIR
+# (default .bench_out) for bench-compare (bench_scaling runs in the compare
+# step itself); bench_service additionally writes TRACE_service.json, the
+# obs span dump CI uploads and feeds through `repro.obs.report`.
 bench-smoke:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
@@ -42,6 +44,7 @@ bench-compare:
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_service.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_mutation.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_partition_balance.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 $(PYTHON) benchmarks/bench_scaling.py
 	PYTHONPATH=src:. $(PYTHON) benchmarks/compare.py
 
@@ -52,6 +55,7 @@ bench-baseline:
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_service.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_comm.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_mutation.py
+	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_partition_balance.py
 	PYTHONPATH=src:. BENCH_SMOKE=1 BENCH_OUT_DIR=benchmarks/baselines $(PYTHON) benchmarks/bench_scaling.py
 
 quickstart:
@@ -61,3 +65,10 @@ quickstart:
 # drive a mixed range/kNN request stream through QueryService.
 serve-demo:
 	PYTHONPATH=src $(PYTHON) examples/query_service.py
+
+# serve-demo with the observability layer on: prints the metrics snapshot,
+# writes a Chrome trace (TRACE_OUT, default trace_demo.json -- open in
+# chrome://tracing or Perfetto) and its per-phase report table.
+trace-demo:
+	PYTHONPATH=src TRACE_OUT=trace_demo.json $(PYTHON) examples/query_service.py
+	PYTHONPATH=src $(PYTHON) -m repro.obs.report trace_demo.json

@@ -10,7 +10,10 @@ cost estimate of ``DistributedSelfJoinEngine`` drives round-robin vs.
 ratio vs. the dense ring is recorded (the repaired-index effect).
 
 ``--tiny`` (or BENCH_SMOKE=1) shrinks the datasets so `make bench-smoke`
-keeps this path alive at CI scale.
+keeps this path alive at CI scale.  Emits ``BENCH_partition.json`` for the
+regression gate: the worker-load balance facts (round-robin and LPT max
+loads, LPT never worse than round-robin) are deterministic contracts, the
+per-figure wall times are slack-gated metrics.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import record
+from benchmarks.common import emit_bench_json, record
 from repro.core import (
     DistributedSelfJoinEngine,
     SelfJoinConfig,
@@ -77,6 +80,9 @@ def dist_balance(d, eps, k, workers=8, n_batches=32):
 
 def run(tiny: bool = False):
     results = {}
+    contracts: dict = {}
+    metrics: dict = {}
+    info: dict = {"tiny": tiny}
     for name, scale, eps, nb in (TINY_CELLS if tiny else FULL_CELLS):
         d = paper_dataset(name, scale)
         times = batch_times(d, eps, 6, nb)
@@ -94,6 +100,22 @@ def run(tiny: bool = False):
             f"dense={stats.num_candidates_dense};"
             f"filter_ratio={stats.candidate_filter_ratio:.3f}",
         )
+        # worker loads come from the memoized candidate-cost estimates --
+        # deterministic for a fixed dataset, so they gate exactly
+        contracts[f"nb/{name}"] = nb
+        contracts[f"rr_max_load/{name}"] = int(round(float(rr_loads.max())))
+        contracts[f"lpt_max_load/{name}"] = int(round(float(dyn_loads.max())))
+        contracts[f"lpt_max_le_rr/{name}"] = bool(
+            dyn_loads.max() <= rr_loads.max()
+        )
+        metrics[f"batch_wall_us/{name}"] = float(times.sum() * 1e6)
+        info[f"rel_spread/{name}"] = round(
+            float((times.max() - times.min()) / times.mean()), 3
+        )
+        info[f"filter_ratio/{name}"] = round(
+            float(stats.candidate_filter_ratio), 3
+        )
+    emit_bench_json("partition", contracts=contracts, metrics=metrics, info=info)
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(results, f)

@@ -18,7 +18,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit_bench_json, record
+from benchmarks.common import emit_bench_json, record, span_summary, write_trace
+from repro import obs
 from repro.core import SelfJoinConfig
 from repro.data import exponential_dataset
 from repro.join import QueryService, SimilarityIndex
@@ -78,12 +79,35 @@ def run(tiny: bool = False):
     # always cost the same trace count over the same bucket set
     contracts["num_traces"] = t.num_traces
     contracts["buckets"] = sorted(service.buckets_used)
+
+    # -- observability contracts (DESIGN.md #11) ---------------------------
+    # the timed sections above ran with the tracer DISABLED; zero recorded
+    # events is what makes the baselined QPS metrics the disabled-path
+    # overhead guard (any always-on instrumentation would also show up as
+    # a slack-gated wall-time regression against the pre-obs baselines)
+    contracts["obs_disabled_events"] = obs.event_count()
+    tr0, dd0 = t.num_traces, t.num_device_dispatches
+    with obs.capture() as cap:
+        for nq in p["batches"]:
+            q = d[rng.choice(p["n"], size=nq, replace=False)]
+            service.range_count(q, p["eps"])
+        service.knn(q[: p["batches"][0]], p["k"])
+    d_tr = service.total.num_traces - tr0
+    d_dd = service.total.num_device_dispatches - dd0
+    contracts["obs_trace_spans_match"] = cap.span_count(cat="trace") == d_tr
+    contracts["obs_dispatch_spans_match"] = (
+        cap.span_count(cat="dispatch") == d_dd
+        and cap.metric("service_dispatches_total") == d_dd
+    )
+    write_trace(cap, "service")
+
     emit_bench_json(
         "service",
         contracts=contracts,
         metrics=metrics,
         info={"n": p["n"], "dims": p["dims"], "eps": p["eps"],
-              "requests": t.num_requests, "tiny": tiny},
+              "requests": service.total.num_requests, "tiny": tiny,
+              "obs_spans": span_summary(cap)},
     )
 
 

@@ -55,6 +55,37 @@ def emit_bench_json(
     print(f"wrote {path}", flush=True)
     return path
 
+def write_trace(cap, name: str) -> str:
+    """Write a capture's Chrome trace as ``TRACE_<name>.json``; return path.
+
+    Lands next to the BENCH_*.json rows in ``BENCH_OUT_DIR`` so CI can
+    upload the trace as an artifact and run ``repro.obs.report`` over it
+    (a malformed trace fails the build).
+    """
+    os.makedirs(BENCH_OUT_DIR, exist_ok=True)
+    path = os.path.join(BENCH_OUT_DIR, f"TRACE_{name}.json")
+    cap.write_chrome_trace(path)
+    print(f"wrote {path}", flush=True)
+    return path
+
+
+def span_summary(cap) -> Dict[str, object]:
+    """Compact per-category span summary of a capture, for BENCH info rows.
+
+    ``{cat: {"count": N, "total_us": T}}`` -- enough to see where a bench
+    run spent its time without shipping the whole event list.
+    """
+    from repro.obs.report import build_report
+
+    rep = build_report(cap.chrome_trace()["traceEvents"])
+    out: Dict[str, object] = {}
+    for cat, names in rep["phases"].items():
+        count = sum(a["count"] for a in names.values())
+        total = sum(a["total_us"] for a in names.values())
+        out[cat] = {"count": count, "total_us": round(total, 1)}
+    return out
+
+
 # Shared fused-vs-host measurement for the distributed engine (used by
 # bench_comm's contract row and bench_scaling's per-|p| rows).  Runs in a
 # subprocess: the 8-device flag must precede jax init.

@@ -10,15 +10,23 @@ index live -- delta-buffer inserts, tombstone deletes, and a compaction
 whose atomic snapshot swap leaves every answer bit-identical -- watching
 the compile-reuse contract (one executable per shape bucket, zero traces
 across the swap) hold in the stats.
+
+The whole stream runs under ``obs.capture()`` (DESIGN.md #11): the demo
+ends with the metrics-registry snapshot, a Chrome-trace dump (``TRACE_OUT``
+env, default ``trace_demo.json`` in the temp dir -- open in
+chrome://tracing or https://ui.perfetto.dev) and its per-phase report
+table.  ``make trace-demo`` runs this plus the standalone report CLI.
 """
 import os
 import tempfile
 
 import numpy as np
 
+from repro import obs
 from repro.core import SelfJoinConfig
 from repro.data import exponential_dataset
 from repro.join import QueryService, SimilarityIndex
+from repro.obs.report import build_report, format_report
 
 # the dataset the service indexes (Syn16D at CPU-demo scale)
 D = exponential_dataset(num_points=8_000, num_dims=16, seed=0)
@@ -36,59 +44,83 @@ print(f"reloaded index from {path}")
 service = QueryService(index)
 rng = np.random.default_rng(1)
 
-# batched range queries at mixed batch sizes and radii
-for nq, eps in [(3, 0.05), (100, 0.03), (57, 0.05), (100, 0.02)]:
-    q = D[rng.choice(len(D), size=nq, replace=False)]
-    res = service.range_count(q, eps)
-    print(f"range_count  nq={nq:4d} eps={eps:.3f} -> "
-          f"{res.stats.num_results:7d} neighbours  "
-          f"bucket={res.stats.bucket:4d} new_traces={res.stats.num_traces} "
-          f"dispatches={res.stats.num_device_dispatches}")
+# the whole stream records spans + mirrored metrics (DESIGN.md #11); the
+# tracer is off outside this window, so the service is uninstrumented at
+# rest -- one attribute check per span site
+with obs.capture() as cap:
+    # batched range queries at mixed batch sizes and radii
+    for nq, eps in [(3, 0.05), (100, 0.03), (57, 0.05), (100, 0.02)]:
+        q = D[rng.choice(len(D), size=nq, replace=False)]
+        res = service.range_count(q, eps)
+        print(f"range_count  nq={nq:4d} eps={eps:.3f} -> "
+              f"{res.stats.num_results:7d} neighbours  "
+              f"bucket={res.stats.bucket:4d} new_traces={res.stats.num_traces} "
+              f"dispatches={res.stats.num_device_dispatches}")
 
-# materialized pairs
-q = D[:64]
-res = service.range_pairs(q, 0.04)
-print(f"range_pairs  nq=64  eps=0.040 -> {res.pairs.shape[0]:7d} pairs")
+    # materialized pairs
+    q = D[:64]
+    res = service.range_pairs(q, 0.04)
+    print(f"range_pairs  nq=64  eps=0.040 -> {res.pairs.shape[0]:7d} pairs")
 
-# kNN by adaptive eps expansion
-kn = service.knn(q, k=8)
-print(f"knn          nq=64  k=8       -> final eps={kn.stats.eps:.3f} "
-      f"after {kn.stats.eps_rounds} expansion round(s); "
-      f"nearest of q0: ids={kn.indices[0, :4].tolist()} "
-      f"dists={np.round(kn.distances[0, :4], 4).tolist()}")
+    # kNN by adaptive eps expansion
+    kn = service.knn(q, k=8)
+    print(f"knn          nq=64  k=8       -> final eps={kn.stats.eps:.3f} "
+          f"after {kn.stats.eps_rounds} expansion round(s); "
+          f"nearest of q0: ids={kn.indices[0, :4].tolist()} "
+          f"dists={np.round(kn.distances[0, :4], 4).tolist()}")
 
-# spot-check: the served counts equal float64 brute force on a subset
-sub = D[:1500]
-got = service.range_count(sub, 0.05).counts
-d2 = ((sub[:, None, :].astype(np.float64) - D[None, :, :].astype(np.float64)) ** 2).sum(-1)
-assert np.array_equal(got, (d2 <= 0.05 ** 2).sum(1))
-print("verified against float64 brute force on a 1.5k-query batch.")
+    # spot-check: the served counts equal float64 brute force on a subset
+    sub = D[:1500]
+    got = service.range_count(sub, 0.05).counts
+    d2 = ((sub[:, None, :].astype(np.float64) - D[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    assert np.array_equal(got, (d2 <= 0.05 ** 2).sum(1))
+    print("verified against float64 brute force on a 1.5k-query batch.")
 
-# live churn (DESIGN.md #10): inserts land in a device-resident delta
-# buffer, deletes tombstone, and queries keep serving the LIVE set from
-# the same warm executables -- no rebuild on the request path
-new_pts = exponential_dataset(num_points=300, num_dims=16, seed=2)
-new_ids = index.insert(new_pts)
-index.delete(new_ids[:50])
-index.delete(rng.choice(8_000, size=100, replace=False))
-res = service.range_count(q, 0.04)
-print(f"after churn  nq=64  eps=0.040 -> {res.stats.num_results:7d} neighbours  "
-      f"epoch={res.stats.epoch} delta={res.stats.delta_size} "
-      f"tombstones={res.stats.tombstone_count} "
-      f"new_traces={res.stats.num_traces}")
+    # live churn (DESIGN.md #10): inserts land in a device-resident delta
+    # buffer, deletes tombstone, and queries keep serving the LIVE set from
+    # the same warm executables -- no rebuild on the request path
+    new_pts = exponential_dataset(num_points=300, num_dims=16, seed=2)
+    new_ids = index.insert(new_pts)
+    index.delete(new_ids[:50])
+    index.delete(rng.choice(8_000, size=100, replace=False))
+    res = service.range_count(q, 0.04)
+    print(f"after churn  nq=64  eps=0.040 -> {res.stats.num_results:7d} neighbours  "
+          f"epoch={res.stats.epoch} delta={res.stats.delta_size} "
+          f"tombstones={res.stats.tombstone_count} "
+          f"new_traces={res.stats.num_traces}")
 
-# compact: fold the churn into a fresh snapshot behind an atomic swap --
-# same-bucket shapes mean the swap retraces NOTHING warm
-before = service.range_pairs(q, 0.04)
-traces0 = service.total.num_traces
-index.compact()
-after = service.range_pairs(q, 0.04)
-assert np.array_equal(before.pairs, after.pairs)   # bit-identical across swap
-print(f"compacted to epoch {index.epoch}: |live|={index.num_points}, "
-      f"answers bit-identical, "
-      f"swap cost {service.total.num_traces - traces0} new traces")
+    # compact: fold the churn into a fresh snapshot behind an atomic swap --
+    # same-bucket shapes mean the swap retraces NOTHING warm
+    before = service.range_pairs(q, 0.04)
+    traces0 = service.total.num_traces
+    index.compact()
+    after = service.range_pairs(q, 0.04)
+    assert np.array_equal(before.pairs, after.pairs)   # bit-identical across swap
+    print(f"compacted to epoch {index.epoch}: |live|={index.num_points}, "
+          f"answers bit-identical, "
+          f"swap cost {service.total.num_traces - traces0} new traces")
 
 t = service.total
 print(f"stream totals: {t.num_requests} requests, {t.num_queries} queries, "
       f"{t.num_traces} program traces over {sorted(service.buckets_used)} "
       f"buckets, {t.num_device_dispatches} dispatches")
+
+# -- observability epilogue (DESIGN.md #11) ---------------------------------
+# the span counts are exact mirrors of the stats above: one "trace" instant
+# per program trace, one "dispatch" span per device launch
+assert cap.span_count(cat="trace") == t.num_traces
+assert cap.span_count(cat="dispatch") == t.num_device_dispatches
+assert cap.metric("service_dispatches_total") == t.num_device_dispatches
+
+print("\nmetrics snapshot (Prometheus exposition format, service series):")
+for line in obs.REGISTRY.to_prometheus_text().splitlines():
+    if line.startswith(("service_", "index_", "# TYPE service", "# TYPE index")):
+        print(f"  {line}")
+
+trace_path = os.environ.get(
+    "TRACE_OUT", os.path.join(tempfile.gettempdir(), "trace_demo.json")
+)
+cap.write_chrome_trace(trace_path)
+print(f"\nwrote Chrome trace to {trace_path} "
+      f"(open in chrome://tracing or https://ui.perfetto.dev)")
+print(format_report(build_report(cap.chrome_trace()["traceEvents"])))

@@ -85,6 +85,35 @@ def ppermute(x, axes, perm):
     return jax.lax.ppermute(x, name, perm)
 
 
+class _NoopAnnotation:
+    """Stand-in for ``jax.profiler.TraceAnnotation`` when unavailable."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+
+_NOOP_ANNOTATION = _NoopAnnotation()
+
+
+def trace_annotation(name: str):
+    """A ``jax.profiler.TraceAnnotation`` context, or a no-op shim.
+
+    Used by the ``repro.obs`` jax bridge so obs spans show up inside XLA
+    profiler timelines on releases that have the profiler API, without
+    making the tracer depend on it.
+    """
+    profiler = getattr(jax, "profiler", None)
+    ta = getattr(profiler, "TraceAnnotation", None) if profiler is not None else None
+    if ta is None:
+        return _NOOP_ANNOTATION
+    return ta(name)
+
+
 def pvary(x, axes):
     """Cast ``x`` to device-varying over ``axes`` where the API exists.
 

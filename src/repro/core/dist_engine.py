@@ -95,6 +95,7 @@ from repro.core.types import (
     SelfJoinResult,
     SelfJoinStats,
 )
+from repro import obs
 from repro.kernels import ops
 
 AxisNames = Union[str, Tuple[str, ...]]
@@ -295,6 +296,12 @@ class DistributedSelfJoinEngine:
         program takes it as a traced scalar, so a sweep at or below the
         packed radius reuses both the pack and the compiled executable.
         """
+        with obs.span(
+            "ring.pack", "plan", workers=self.num_workers, eps=float(eps)
+        ):
+            return self._pack_fused_impl(eps)
+
+    def _pack_fused_impl(self, eps: float):
         p = self.num_workers
         cfg = self.config
         eng = self.engine_config or EngineConfig()
@@ -308,12 +315,23 @@ class DistributedSelfJoinEngine:
 
         # |p|^2 host-side bipartite plans: worker k meets shard (k - r) % p
         # in round r (None where either side is empty -> fully masked round)
-        qplans = [
-            [self.shards[(k - r) % p].build_query_plan(q_pts[k], eps)
-             if nq[k] else None
-             for r in range(p)]
-            for k in range(p)
-        ]
+        qplans = []
+        for k in range(p):
+            row = []
+            for r in range(p):
+                if nq[k]:
+                    with obs.span(
+                        "ring.pack.plan", "ring",
+                        worker=k, round=r, nq=nq[k],
+                    ):
+                        row.append(
+                            self.shards[(k - r) % p].build_query_plan(
+                                q_pts[k], eps
+                            )
+                        )
+                else:
+                    row.append(None)
+            qplans.append(row)
         flat = [qp for row in qplans for qp in row if qp is not None]
         max_qt = max(max((qp.num_q_tiles for qp in flat), default=0), 1)
         max_dt = max(max((e.snapshot.plan.num_tiles if e.snapshot.plan else 0
@@ -398,6 +416,7 @@ class DistributedSelfJoinEngine:
 
         def local(qt, qstart, qlen, qord, pq, pd, real, dt, dlen, eps_in):
             engine_self.fused_traces += 1  # traced once; executions replay it
+            obs.event("ring.trace", "compile", program="fused_count")
             qt, qstart, qlen, qord = qt[0], qstart[0], qlen[0], qord[0]
             pq, pd, real = pq[0], pd[0], real[0]
             dt, dlen = dt[0], dlen[0]
@@ -447,26 +466,30 @@ class DistributedSelfJoinEngine:
         hit_rate = 0.0
         if best_kr is not None:
             k0, r0 = best_kr
-            qp = qplans[k0][r0]
-            j0 = (k0 - r0) % p
-            n_s = min(qp.num_pairs, 512)
-            rng = np.random.default_rng(0)
-            sel = (
-                rng.choice(qp.num_pairs, size=n_s, replace=False)
-                if qp.num_pairs > n_s else np.arange(n_s)
-            )
-            len_c = np.concatenate([qlen[k0, r0], dlen[j0]])
-            counts_s, _ = ops.tile_counts(
-                np.concatenate([qt[k0, r0], dt[j0]], axis=0), len_c,
-                qp.pair_q[sel], qp.pair_d[sel] + max_qt,
-                eps=eps, dim_block=cfg.dim_block, shortc=cfg.shortc,
-                backend=backend, chunk=min(n_s, 512), interpret=interpret,
-            )
-            cand_s = float(
-                (len_c[qp.pair_q[sel]].astype(np.float64)
-                 * len_c[qp.pair_d[sel] + max_qt]).sum()
-            )
-            hit_rate = float(counts_s.sum()) / max(cand_s, 1.0)
+            with obs.span(
+                "ring.pack.sample", "plan", worker=k0, round=r0
+            ) as _sp:
+                qp = qplans[k0][r0]
+                j0 = (k0 - r0) % p
+                n_s = min(qp.num_pairs, 512)
+                rng = np.random.default_rng(0)
+                sel = (
+                    rng.choice(qp.num_pairs, size=n_s, replace=False)
+                    if qp.num_pairs > n_s else np.arange(n_s)
+                )
+                len_c = np.concatenate([qlen[k0, r0], dlen[j0]])
+                counts_s, _ = ops.tile_counts(
+                    np.concatenate([qt[k0, r0], dt[j0]], axis=0), len_c,
+                    qp.pair_q[sel], qp.pair_d[sel] + max_qt,
+                    eps=eps, dim_block=cfg.dim_block, shortc=cfg.shortc,
+                    backend=backend, chunk=min(n_s, 512), interpret=interpret,
+                )
+                cand_s = float(
+                    (len_c[qp.pair_q[sel]].astype(np.float64)
+                     * len_c[qp.pair_d[sel] + max_qt]).sum()
+                )
+                hit_rate = float(counts_s.sum()) / max(cand_s, 1.0)
+                _sp.set(hit_rate=hit_rate, sampled_pairs=int(n_s))
         pairs_est = [
             int(np.ceil(hit_rate * sum(
                 qp.num_candidates for qp in qplans[k] if qp is not None
@@ -521,6 +544,10 @@ class DistributedSelfJoinEngine:
             def local_pairs(qt, qstart, qlen, qog, pqp, pdp, realp,
                             dt, dlen, dstart, dord, eps_in):
                 engine_self.fused_pairs_traces += 1
+                obs.event(
+                    "ring.trace", "compile", program="fused_pairs",
+                    cap=cap, hit_cap=hit_cap,
+                )
                 qt, qstart, qlen, qog = qt[0], qstart[0], qlen[0], qog[0]
                 pqp, pdp, realp = pqp[0], pdp[0], realp[0]
                 dt, dlen, dstart, dord = dt[0], dlen[0], dstart[0], dord[0]
@@ -586,9 +613,13 @@ class DistributedSelfJoinEngine:
         pack = self._fused_pack
         if pack is None or eps > pack["eps"]:
             pack = self._pack_fused(max(eps, self.config.eps))
-        out = np.asarray(
-            jax.device_get(pack["fn"](*pack["args"], jnp.float32(eps)))
-        )
+        with obs.span(
+            "ring.fused.count", "dispatch",
+            workers=self.num_workers, rounds=self.num_workers, eps=eps,
+        ):
+            out = np.asarray(
+                jax.device_get(pack["fn"](*pack["args"], jnp.float32(eps)))
+            )
         self.fused_executions += 1
         counts = np.zeros(self.num_points, dtype=np.int64)
         for k in range(self.num_workers):
@@ -622,6 +653,7 @@ class DistributedSelfJoinEngine:
         stats.num_nonempty_cells = sum(
             e.snapshot.grid.num_cells for e in self.shards if e.snapshot.grid
         )
+        obs.mirror_selfjoin_stats(stats, path="ring_fused", mode="count")
         return SelfJoinResult(counts=counts, stats=stats)
 
     def _index_stats(self, stats: SelfJoinStats) -> SelfJoinStats:
@@ -686,7 +718,12 @@ class DistributedSelfJoinEngine:
             if fn is None:
                 fn = pack["make_pairs_fn"](cap, hit_cap)
                 pack["pairs_fns"][key] = fn
-            buf, off, mh = fn(*pack["pairs_args"], jnp.float32(eps))
+            with obs.span(
+                "ring.fused.pairs", "dispatch",
+                workers=p, rounds=p, eps=eps, attempt=retries,
+                cap=cap, hit_cap=hit_cap,
+            ):
+                buf, off, mh = fn(*pack["pairs_args"], jnp.float32(eps))
             self.fused_pairs_executions += 1
             off_np = np.asarray(jax.device_get(off)).astype(np.int64)
             mh_np = np.asarray(jax.device_get(mh)).astype(np.int64)
@@ -701,11 +738,19 @@ class DistributedSelfJoinEngine:
                         f"fused pairs rank window did not converge "
                         f"(max chunk hits {max_mh} > hit_cap {hit_cap})"
                     )
+                obs.event(
+                    "ring.pairs.retry", "retry", kind="hit_cap",
+                    max_hits=max_mh, hit_cap=hit_cap,
+                )
                 hit_cap = min(flat_per_chunk, -(-max_mh // 1024) * 1024)
                 retries += 1
                 continue
             if max_off > cap:
                 if auto and eng.auto_grow and retries < _MAX_AUTO_GROW:
+                    obs.event(
+                        "ring.pairs.retry", "retry", kind="capacity",
+                        num=max_off, cap=cap,
+                    )
                     cap = batching_mod.suggest_pairs_capacity(max_off, 1.0)
                     retries += 1
                     continue
@@ -747,6 +792,7 @@ class DistributedSelfJoinEngine:
             num_candidates_dense=self._dense_candidates(pack["nq"]),
             num_results=int(pairs.shape[0]),
         )
+        obs.mirror_selfjoin_stats(stats, path="ring_fused", mode="pairs")
         return SelfJoinResult(
             counts=counts, stats=self._index_stats(stats), pairs=pairs
         )
@@ -775,13 +821,16 @@ class DistributedSelfJoinEngine:
         counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
         skipped = jnp.zeros((), jnp.int32)
         for pa, pb, real in tab.chunks(eng.count_chunk):
-            counts_sorted, skipped = _count_chunk_program(
-                counts_sorted, skipped,
-                tab.tiles, tab.tile_len, tab.tile_start,
-                pa, pb, real, jnp.float32(eps),
-                dim_block=cfg.dim_block, shortc=shortc,
-                backend=backend, interpret=eng.interpret,
-            )
+            with obs.span(
+                "ring.block.count.chunk", "dispatch", worker=k, shard=j
+            ):
+                counts_sorted, skipped = _count_chunk_program(
+                    counts_sorted, skipped,
+                    tab.tiles, tab.tile_len, tab.tile_start,
+                    pa, pb, real, jnp.float32(eps),
+                    dim_block=cfg.dim_block, shortc=shortc,
+                    backend=backend, interpret=eng.interpret,
+                )
             stats.num_device_dispatches += 1
         total = int(np.asarray(counts_sorted.sum()))
 
@@ -794,13 +843,16 @@ class DistributedSelfJoinEngine:
             offset = jnp.zeros((), jnp.int32)
             max_hits = jnp.zeros((), jnp.int32)
             for pa, pb, real in tab.chunks(eng.pairs_chunk):
-                buf, offset, max_hits = _pairs_chunk_program(
-                    buf, offset, max_hits,
-                    tab.tiles, tab.tile_len, tab.tile_start, tab.order,
-                    pa, pb, real, jnp.float32(eps),
-                    hit_cap=hit_cap, dim_block=cfg.dim_block,
-                    backend=backend, interpret=eng.interpret,
-                )
+                with obs.span(
+                    "ring.block.pairs.chunk", "dispatch", worker=k, shard=j
+                ):
+                    buf, offset, max_hits = _pairs_chunk_program(
+                        buf, offset, max_hits,
+                        tab.tiles, tab.tile_len, tab.tile_start, tab.order,
+                        pa, pb, real, jnp.float32(eps),
+                        hit_cap=hit_cap, dim_block=cfg.dim_block,
+                        backend=backend, interpret=eng.interpret,
+                    )
                 stats.num_device_dispatches += 1
                 stats.num_chunks += 1
             if int(max_hits) <= hit_cap:
@@ -847,13 +899,17 @@ class DistributedSelfJoinEngine:
         q_index = [self.worker_query_index(k) for k in range(self.num_workers)]
         q_points = [self._pts[idx] for idx in q_index]
         blocks = []
-        for round_sched in self.ring_schedule():
-            for k, j in round_sched:
-                if q_index[k].size == 0:
-                    continue
-                blocks.append(
-                    self._block_pairs(k, j, q_points[k], eps, eng, stats)
-                )
+        for r, round_sched in enumerate(self.ring_schedule()):
+            with obs.span(
+                "ring.round", "ring",
+                round=r, workers=self.num_workers, mode="pairs",
+            ):
+                for k, j in round_sched:
+                    if q_index[k].size == 0:
+                        continue
+                    blocks.append(
+                        self._block_pairs(k, j, q_points[k], eps, eng, stats)
+                    )
             stats.num_rounds += 1
         pairs = (
             np.concatenate(blocks) if blocks else np.zeros((0, 2), np.int64)
@@ -873,6 +929,7 @@ class DistributedSelfJoinEngine:
         stats.num_candidates_dense = self._dense_candidates(
             [idx.size for idx in q_index]
         )
+        obs.mirror_selfjoin_stats(stats, path="ring_host", mode="pairs")
         return SelfJoinResult(
             counts=counts, stats=self._index_stats(stats), pairs=pairs
         )
@@ -907,21 +964,27 @@ class DistributedSelfJoinEngine:
         q_index = [self.worker_query_index(k) for k in range(self.num_workers)]
         q_points = [self._pts[idx] for idx in q_index]
         shard_sizes = np.diff(self.shard_bounds)
-        for round_sched in self.ring_schedule():
-            for k, j in round_sched:
-                if q_index[k].size == 0:
-                    continue
-                res = self.shards[j].count_query(q_points[k], eps)
-                counts[q_index[k]] += res.counts
-                s = res.stats
-                stats.num_tile_pairs_total += s.num_tile_pairs_total
-                stats.num_tile_pairs_evaluated += s.num_tile_pairs_evaluated
-                stats.num_candidates += s.num_candidates
-                stats.num_chunks += s.num_chunks
-                stats.num_device_dispatches += s.num_chunks
-                stats.dim_blocks_skipped += s.dim_blocks_skipped
-                stats.dim_blocks_total += s.dim_blocks_total
-                stats.num_candidates_dense += int(q_index[k].size * shard_sizes[j])
+        for r, round_sched in enumerate(self.ring_schedule()):
+            with obs.span(
+                "ring.round", "ring",
+                round=r, workers=self.num_workers, mode="count",
+            ):
+                for k, j in round_sched:
+                    if q_index[k].size == 0:
+                        continue
+                    res = self.shards[j].count_query(q_points[k], eps)
+                    counts[q_index[k]] += res.counts
+                    s = res.stats
+                    stats.num_tile_pairs_total += s.num_tile_pairs_total
+                    stats.num_tile_pairs_evaluated += s.num_tile_pairs_evaluated
+                    stats.num_candidates += s.num_candidates
+                    stats.num_chunks += s.num_chunks
+                    stats.num_device_dispatches += s.num_chunks
+                    stats.dim_blocks_skipped += s.dim_blocks_skipped
+                    stats.dim_blocks_total += s.dim_blocks_total
+                    stats.num_candidates_dense += int(
+                        q_index[k].size * shard_sizes[j]
+                    )
             stats.num_rounds += 1
         stats.num_tiles = sum(
             e.snapshot.plan.num_tiles for e in self.shards if e.snapshot.plan
@@ -930,6 +993,7 @@ class DistributedSelfJoinEngine:
             e.snapshot.grid.num_cells for e in self.shards if e.snapshot.grid
         )
         stats.num_results = int(counts.sum())
+        obs.mirror_selfjoin_stats(stats, path="ring_host", mode="count")
         return SelfJoinResult(counts=counts, stats=stats)
 
     def self_join_pairs(
@@ -1005,6 +1069,7 @@ class DistributedSelfJoinEngine:
         eps = min(eps, eps_cap)
         rounds = 0
         while True:
+            obs.event("ring.knn.round", "ring", round=rounds, eps=eps, k=k)
             res = self.self_join_pairs(eps=eps, fused=fused)
             rounds += 1
             if (res.counts >= k_eff).all() or eps >= eps_cap:

@@ -72,6 +72,7 @@ from repro.core.types import (
     SelfJoinResult,
     SelfJoinStats,
 )
+from repro import obs
 from repro.kernels import ops
 
 _MAX_AUTO_GROW = 8  # doublings before giving up on an auto-sized buffer
@@ -128,9 +129,17 @@ def count_chunk_step(
     return counts_sorted, skipped_tot
 
 
+@functools.wraps(count_chunk_step)
+def _count_chunk_traced(*args, **kwargs):
+    # Runs only while XLA traces (cache misses), so the obs event stream
+    # distinguishes "compiled a new count program" from warm dispatches.
+    obs.event("engine.trace", "compile", program="count_chunk")
+    return count_chunk_step(*args, **kwargs)
+
+
 _count_chunk_program = functools.partial(
     jax.jit, static_argnames=("dim_block", "shortc", "backend", "interpret")
-)(count_chunk_step)
+)(_count_chunk_traced)
 
 
 def pairs_chunk_step(
@@ -207,9 +216,15 @@ def pairs_chunk_step(
     return buf, offset, max_chunk_hits
 
 
+@functools.wraps(pairs_chunk_step)
+def _pairs_chunk_traced(*args, **kwargs):
+    obs.event("engine.trace", "compile", program="pairs_chunk")
+    return pairs_chunk_step(*args, **kwargs)
+
+
 _pairs_chunk_program = functools.partial(
     jax.jit, static_argnames=("hit_cap", "dim_block", "backend", "interpret")
-)(pairs_chunk_step)
+)(_pairs_chunk_traced)
 
 
 @jax.jit
@@ -316,7 +331,10 @@ class SelfJoinEngine:
     ):
         self.config = config
         self.engine = engine_config or EngineConfig()
-        self.snapshot = GridSnapshot.build(d, config)
+        with obs.span(
+            "engine.snapshot_build", "plan", n=int(np.asarray(d).shape[0])
+        ):
+            self.snapshot = GridSnapshot.build(d, config)
 
     @classmethod
     def from_snapshot(
@@ -384,14 +402,21 @@ class SelfJoinEngine:
             snap.index_eps is not None and eps <= snap.index_eps
         ):
             return snap
-        return snap.rebuilt(eps)
+        with obs.span(
+            "engine.snapshot_rebuild", "plan",
+            eps=eps, n=snap.num_points, pinned=True,
+        ):
+            return snap.rebuilt(eps)
 
     def _ensure_index(self, eps: float) -> None:
         snap = self.snapshot
         if snap.num_points == 0:
             return
         if snap.index_eps is None or eps > snap.index_eps:
-            self.swap_snapshot(snap.rebuilt(eps))
+            with obs.span(
+                "engine.snapshot_rebuild", "plan", eps=eps, n=snap.num_points
+            ):
+                self.swap_snapshot(snap.rebuilt(eps))
 
     # -- delegating views (compat surface over the snapshot) ---------------
 
@@ -527,9 +552,13 @@ class SelfJoinEngine:
             apply_reorder(q_pts, snapshot.perm)
             if snapshot.perm is not None else q_pts
         )
-        return build_query_tile_plan(
-            snapshot.grid, snapshot.plan, q_work, self.config.sortidu
-        )
+        with obs.span(
+            "engine.build_query_plan", "plan",
+            nq=int(q_work.shape[0]), eps=eps,
+        ):
+            return build_query_tile_plan(
+                snapshot.grid, snapshot.plan, q_work, self.config.sortidu
+            )
 
     def prepare_query(
         self,
@@ -558,6 +587,21 @@ class SelfJoinEngine:
         default the resident one serves, rebuilt if ``eps`` outgrows it.
         Returns ``None`` when either side is empty.
         """
+        with obs.span(
+            "engine.prepare_query", "plan", nq=int(np.asarray(q_pts).shape[0])
+        ):
+            return self._prepare_query_impl(
+                q_pts, eps, pad_queries_to=pad_queries_to, snapshot=snapshot
+            )
+
+    def _prepare_query_impl(
+        self,
+        q_pts: np.ndarray,
+        eps: Optional[float] = None,
+        *,
+        pad_queries_to: Optional[int] = None,
+        snapshot: Optional[GridSnapshot] = None,
+    ) -> Optional[QueryPlanTables]:
         eps = self.config.eps if eps is None else float(eps)
         q_pts = np.ascontiguousarray(np.asarray(q_pts, dtype=np.float32))
         nq = q_pts.shape[0]
@@ -705,22 +749,29 @@ class SelfJoinEngine:
 
         counts_sorted = jnp.zeros(snap.num_points, jnp.int32)
         skipped_tot = jnp.zeros((), jnp.int32)
-        for pa, pb, real in chunks(eng.count_chunk):
-            counts_sorted, skipped_tot = _count_chunk_program(
-                counts_sorted, skipped_tot,
-                tiles, tile_len, tile_start,
-                pa, pb, real, eps,
-                dim_block=cfg.dim_block, shortc=shortc,
-                backend=backend,
-                interpret=eng.interpret,
-            )
-            stats.num_chunks += 1
-        counts = np.asarray(
-            _unsort_counts(counts_sorted, snap.point_order)
-        ).astype(np.int64)
+        with obs.span(
+            "engine.count", "join",
+            n=snap.num_points, eps=eps, tier=dec.execution,
+        ):
+            for pa, pb, real in chunks(eng.count_chunk):
+                with obs.span("engine.count.chunk", "dispatch"):
+                    counts_sorted, skipped_tot = _count_chunk_program(
+                        counts_sorted, skipped_tot,
+                        tiles, tile_len, tile_start,
+                        pa, pb, real, eps,
+                        dim_block=cfg.dim_block, shortc=shortc,
+                        backend=backend,
+                        interpret=eng.interpret,
+                    )
+                stats.num_chunks += 1
+                stats.num_device_dispatches += 1
+            counts = np.asarray(
+                _unsort_counts(counts_sorted, snap.point_order)
+            ).astype(np.int64)
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
         stats.dim_blocks_total = plan.num_pairs * snap.num_dim_blocks
+        obs.mirror_selfjoin_stats(stats, path="engine", mode="count")
         return SelfJoinResult(counts=counts, stats=stats)
 
     def count_query(
@@ -768,22 +819,31 @@ class SelfJoinEngine:
 
         counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
         skipped_tot = jnp.zeros((), jnp.int32)
-        for pa, pb, real in tab.chunks(eng.count_chunk):
-            counts_sorted, skipped_tot = _count_chunk_program(
-                counts_sorted, skipped_tot,
-                tab.tiles, tab.tile_len, tab.tile_start,
-                pa, pb, real, eps,
-                dim_block=cfg.dim_block, shortc=shortc,
-                backend=backend,
-                interpret=eng.interpret,
-            )
-            stats.num_chunks += 1
-        counts = np.asarray(
-            _unsort_counts(counts_sorted, jnp.asarray(qplan.q_order, jnp.int32))
-        ).astype(np.int64)
+        with obs.span(
+            "engine.count_query", "join",
+            nq=nq, eps=eps, tier=tab.execution,
+        ):
+            for pa, pb, real in tab.chunks(eng.count_chunk):
+                with obs.span("engine.count.chunk", "dispatch"):
+                    counts_sorted, skipped_tot = _count_chunk_program(
+                        counts_sorted, skipped_tot,
+                        tab.tiles, tab.tile_len, tab.tile_start,
+                        pa, pb, real, eps,
+                        dim_block=cfg.dim_block, shortc=shortc,
+                        backend=backend,
+                        interpret=eng.interpret,
+                    )
+                stats.num_chunks += 1
+                stats.num_device_dispatches += 1
+            counts = np.asarray(
+                _unsort_counts(
+                    counts_sorted, jnp.asarray(qplan.q_order, jnp.int32)
+                )
+            ).astype(np.int64)
         stats.num_results = int(counts.sum())
         stats.dim_blocks_skipped = int(skipped_tot)
         stats.dim_blocks_total = tab.num_pairs * snap.num_dim_blocks
+        obs.mirror_selfjoin_stats(stats, path="engine", mode="count_query")
         return SelfJoinResult(counts=counts, stats=stats)
 
     def pairs(
@@ -829,6 +889,7 @@ class SelfJoinEngine:
         hit_cap = min(flat_per_chunk, 4096)
 
         retries = 0
+        dispatches = 0
         while True:
             stats = self._base_stats(eps, snap)
             self._record_decision(stats, dec)
@@ -838,25 +899,40 @@ class SelfJoinEngine:
             buf = jnp.zeros((cap + hit_cap, 2), jnp.int32)
             offset = jnp.zeros((), jnp.int32)
             max_hits = jnp.zeros((), jnp.int32)
-            for pa, pb, real in chunks(eng.pairs_chunk):
-                buf, offset, max_hits = _pairs_chunk_program(
-                    buf, offset, max_hits,
-                    tiles, tile_len, tile_start,
-                    snap.point_order, pa, pb, real, eps,
-                    hit_cap=hit_cap, dim_block=cfg.dim_block,
-                    backend=backend, interpret=eng.interpret,
-                )
-                stats.num_chunks += 1
-            num = int(offset)
+            with obs.span(
+                "engine.pairs", "join",
+                n=snap.num_points, eps=eps, tier=dec.execution,
+                attempt=retries,
+            ):
+                for pa, pb, real in chunks(eng.pairs_chunk):
+                    with obs.span("engine.pairs.chunk", "dispatch"):
+                        buf, offset, max_hits = _pairs_chunk_program(
+                            buf, offset, max_hits,
+                            tiles, tile_len, tile_start,
+                            snap.point_order, pa, pb, real, eps,
+                            hit_cap=hit_cap, dim_block=cfg.dim_block,
+                            backend=backend, interpret=eng.interpret,
+                        )
+                    stats.num_chunks += 1
+                    dispatches += 1
+                num = int(offset)
             # exact totals are known after a full pass, so each overflow kind
             # resolves in one retry: widen the per-chunk rank window first,
             # then (auto mode) regrow the buffer to the true |R|.
             if int(max_hits) > hit_cap and retries < _MAX_AUTO_GROW:
+                obs.event(
+                    "engine.pairs.retry", "retry", kind="hit_cap",
+                    max_hits=int(max_hits), hit_cap=hit_cap,
+                )
                 hit_cap = min(flat_per_chunk, -(-int(max_hits) // 1024) * 1024)
                 retries += 1
                 continue
             if num > cap:
                 if auto and eng.auto_grow and retries < _MAX_AUTO_GROW:
+                    obs.event(
+                        "engine.pairs.retry", "retry", kind="capacity",
+                        num=num, cap=cap,
+                    )
                     cap = batching_mod.suggest_pairs_capacity(num, 1.0)
                     retries += 1
                     continue
@@ -876,6 +952,8 @@ class SelfJoinEngine:
         stats.dim_blocks_total = plan.num_pairs * snap.num_dim_blocks
         stats.pairs_capacity = cap
         stats.overflow_retries = retries
+        stats.num_device_dispatches = dispatches
+        obs.mirror_selfjoin_stats(stats, path="engine", mode="pairs")
         return SelfJoinResult(counts=counts, stats=stats, pairs=pairs)
 
     def _auto_capacity(self, eps: float, dec: cost_mod.TierDecision) -> int:

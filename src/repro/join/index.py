@@ -40,6 +40,7 @@ from typing import Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.engine import QueryPlanTables, SelfJoinEngine
 from repro.core.grid import GridIndex, TilePlan, bucket_rows, pad_axis0
 from repro.core.reorder import apply_reorder
@@ -350,12 +351,14 @@ class SimilarityIndex:
         ids = np.arange(self._next_id, self._next_id + m, dtype=np.int64)
         if m == 0:
             return ids
-        self._id_pts = np.concatenate([self._id_pts, pts])
-        self._delta_ids = np.concatenate([self._delta_ids, ids])
-        self._delta_pts = np.concatenate([self._delta_pts, pts])
-        self._next_id += m
-        self._bump()
-        self._maybe_auto_compact()
+        with obs.span("index.insert", "index", m=m, delta=self.delta_size):
+            self._id_pts = np.concatenate([self._id_pts, pts])
+            self._delta_ids = np.concatenate([self._delta_ids, ids])
+            self._delta_pts = np.concatenate([self._delta_pts, pts])
+            self._next_id += m
+            self._bump()
+            obs.inc("index_inserts_total", m)
+            self._maybe_auto_compact()
         return ids
 
     def _maybe_auto_compact(self) -> None:
@@ -367,8 +370,13 @@ class SimilarityIndex:
             return
         threshold = frac * max(int(self._snap_ids.shape[0]), 1)
         if self.delta_size > threshold:
-            self.apply_compact(self.prepare_compact())
+            with obs.span(
+                "index.auto_compact", "index",
+                delta=self.delta_size, snapshot=int(self._snap_ids.shape[0]),
+            ):
+                self.apply_compact(self.prepare_compact())
             self.auto_compactions += 1
+            obs.inc("index_auto_compactions_total")
 
     def delete(self, ids) -> int:
         """Delete live points by global id; returns how many were removed.
@@ -396,13 +404,15 @@ class SimilarityIndex:
                 raise KeyError(
                     f"cannot delete unknown or already-deleted ids {bad.tolist()}"
                 )
-        if in_delta.any():
-            keep = ~np.isin(self._delta_ids, ids)
-            self._delta_ids = self._delta_ids[keep]
-            self._delta_pts = self._delta_pts[keep]
-        if snap_side.size:
-            self._dead_ids = np.union1d(self._dead_ids, snap_side)
-        self._bump()
+        with obs.span("index.delete", "index", m=int(ids.size)):
+            if in_delta.any():
+                keep = ~np.isin(self._delta_ids, ids)
+                self._delta_ids = self._delta_ids[keep]
+                self._delta_pts = self._delta_pts[keep]
+            if snap_side.size:
+                self._dead_ids = np.union1d(self._dead_ids, snap_side)
+            self._bump()
+            obs.inc("index_deletes_total", int(ids.size))
         return int(ids.size)
 
     def prepare_compact(self) -> PendingCompact:
@@ -414,27 +424,32 @@ class SimilarityIndex:
         snapshot's shape buckets forward as floors, so applying it
         invalidates no warm executable whose bucket still fits.
         """
-        old = self.engine.snapshot
-        alive = np.ones(self._snap_ids.shape[0], bool)
-        if self._dead_ids.shape[0]:
-            alive[np.searchsorted(self._snap_ids, self._dead_ids)] = False
-        live_ids = np.concatenate([self._snap_ids[alive], self._delta_ids])
-        srt = np.argsort(live_ids, kind="stable")
-        live_ids = live_ids[srt]
-        live_pts = self.coords_of(live_ids)
-        perm = old.perm if old.num_points else "auto"
-        snapshot = GridSnapshot.build(
-            live_pts, self.config, old.index_eps,
-            perm=perm,
-            min_tile_rows=old.tile_rows,
-            min_point_rows=old.point_rows,
-            min_dense_rows=old.dense_rows,
-        )
-        return PendingCompact(
-            snapshot=snapshot,
-            snap_ids=live_ids,
-            mut_version=self._mut_version,
-        )
+        with obs.span(
+            "index.prepare_compact", "index",
+            live=self.live_count, delta=self.delta_size,
+            tombstones=int(self._dead_ids.shape[0]),
+        ):
+            old = self.engine.snapshot
+            alive = np.ones(self._snap_ids.shape[0], bool)
+            if self._dead_ids.shape[0]:
+                alive[np.searchsorted(self._snap_ids, self._dead_ids)] = False
+            live_ids = np.concatenate([self._snap_ids[alive], self._delta_ids])
+            srt = np.argsort(live_ids, kind="stable")
+            live_ids = live_ids[srt]
+            live_pts = self.coords_of(live_ids)
+            perm = old.perm if old.num_points else "auto"
+            snapshot = GridSnapshot.build(
+                live_pts, self.config, old.index_eps,
+                perm=perm,
+                min_tile_rows=old.tile_rows,
+                min_point_rows=old.point_rows,
+                min_dense_rows=old.dense_rows,
+            )
+            return PendingCompact(
+                snapshot=snapshot,
+                snap_ids=live_ids,
+                mut_version=self._mut_version,
+            )
 
     def apply_compact(self, pending: PendingCompact) -> None:
         """Atomically swap a prepared snapshot in and reset the churn state.
@@ -449,13 +464,18 @@ class SimilarityIndex:
                 "index mutated since prepare_compact(); rebuild the pending "
                 "snapshot against the current state"
             )
-        self.engine.swap_snapshot(pending.snapshot)
-        self._snap_ids = pending.snap_ids
-        self._delta_ids = np.zeros(0, np.int64)
-        self._delta_pts = np.zeros((0, self.num_dims), np.float32)
-        self._dead_ids = np.zeros(0, np.int64)
-        self.epoch += 1
-        self._bump()
+        with obs.span(
+            "index.apply_compact", "index",
+            epoch=self.epoch + 1, n=int(pending.snap_ids.shape[0]),
+        ):
+            self.engine.swap_snapshot(pending.snapshot)
+            self._snap_ids = pending.snap_ids
+            self._delta_ids = np.zeros(0, np.int64)
+            self._delta_pts = np.zeros((0, self.num_dims), np.float32)
+            self._dead_ids = np.zeros(0, np.int64)
+            self.epoch += 1
+            self._bump()
+            obs.inc("index_compactions_total")
 
     def compact(self) -> "SimilarityIndex":
         """Rebuild the snapshot over the live set and swap it in (both halves)."""

@@ -70,6 +70,7 @@ from repro.core.engine import (
 )
 from repro.core.grid import pad_axis0
 from repro.join.index import IndexView, SimilarityIndex
+from repro import obs
 from repro.kernels import ops
 
 _MAX_HITCAP_RETRIES = 8
@@ -183,6 +184,9 @@ class QueryService:
             *, backend, shortc,
         ):
             self._trace_count += 1
+            # the "trace" obs category fires exactly when _trace_count
+            # increments, so trace-span count == ServiceStats.num_traces
+            obs.event("service.trace", "trace", program="count")
             counts, _ = count_chunk_step(
                 counts, jnp.zeros((), jnp.int32),
                 tiles, tile_len, tile_start, pa, pb, real, eps,
@@ -196,6 +200,7 @@ class QueryService:
             pa, pb, real, eps, *, hit_cap, backend,
         ):
             self._trace_count += 1
+            obs.event("service.trace", "trace", program="pairs")
             return pairs_chunk_step(
                 buf, offset, max_hits, tiles, tile_len, tile_start, order,
                 pa, pb, real, eps,
@@ -210,6 +215,7 @@ class QueryService:
         # Rows past ``real`` are padding and masked out.
         def _aux_step(q, pts, real, eps):
             self._trace_count += 1
+            obs.event("service.trace", "trace", program="aux")
             d2 = ((q[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
             valid = jnp.arange(pts.shape[0], dtype=jnp.int32) < real
             return (d2 <= eps * eps) & valid[None, :]
@@ -232,7 +238,8 @@ class QueryService:
 
     def _pin(self, stats: ServiceStats) -> IndexView:
         """Pin the index epoch for one request and record its churn state."""
-        view = self.index.view()
+        with obs.span("service.pin", "service"):
+            view = self.index.view()
         stats.epoch = view.epoch
         stats.delta_size = view.delta_size
         stats.tombstone_count = view.tombstone_count
@@ -278,10 +285,13 @@ class QueryService:
         tier = self._tier_kwargs(tab)
         counts_sorted = jnp.zeros(tab.n_slots, jnp.int32)
         for pa, pb, real in tab.chunks(self._count_chunk):
-            counts_sorted = self._count_step(
-                counts_sorted, tab.tiles, tab.tile_len, tab.tile_start,
-                pa, pb, real, jnp.float32(eps), **tier,
-            )
+            with obs.span(
+                "service.count.chunk", "dispatch", bucket=tab.n_slots
+            ):
+                counts_sorted = self._count_step(
+                    counts_sorted, tab.tiles, tab.tile_len, tab.tile_start,
+                    pa, pb, real, jnp.float32(eps), **tier,
+                )
             stats.num_device_dispatches += 1
         stats.num_candidates += tab.num_candidates
         cs = np.asarray(counts_sorted)
@@ -303,17 +313,24 @@ class QueryService:
             offset = jnp.zeros((), jnp.int32)
             max_hits = jnp.zeros((), jnp.int32)
             for pa, pb, real in tab.chunks(self._pairs_chunk):
-                buf, offset, max_hits = self._pairs_step(
-                    buf, offset, max_hits,
-                    tab.tiles, tab.tile_len, tab.tile_start, tab.order,
-                    pa, pb, real, jnp.float32(eps), hit_cap=hit_cap,
-                    backend=backend,
-                )
+                with obs.span(
+                    "service.pairs.chunk", "dispatch", bucket=tab.n_slots
+                ):
+                    buf, offset, max_hits = self._pairs_step(
+                        buf, offset, max_hits,
+                        tab.tiles, tab.tile_len, tab.tile_start, tab.order,
+                        pa, pb, real, jnp.float32(eps), hit_cap=hit_cap,
+                        backend=backend,
+                    )
                 stats.num_device_dispatches += 1
             if int(max_hits) <= hit_cap:
                 break
             # a single chunk outgrew the rank window: widen to the observed
             # maximum (pow2 so the retry shapes stay bounded) and redo
+            obs.event(
+                "service.pairs.retry", "retry", kind="hit_cap",
+                max_hits=int(max_hits), hit_cap=hit_cap,
+            )
             hit_cap = min(
                 flat_per_chunk, 1 << (int(max_hits) - 1).bit_length()
             )
@@ -336,9 +353,10 @@ class QueryService:
         if pts_dev is None or q.shape[0] == 0:
             return None
         qb = pad_axis0(q, self.bucket_size(q.shape[0]))
-        mask = self._aux_step(
-            jnp.asarray(qb), pts_dev, jnp.int32(m), jnp.float32(eps)
-        )
+        with obs.span("service.aux", "dispatch", m=m):
+            mask = self._aux_step(
+                jnp.asarray(qb), pts_dev, jnp.int32(m), jnp.float32(eps)
+            )
         stats.num_device_dispatches += 1
         stats.num_candidates += q.shape[0] * m
         return np.asarray(mask)[: q.shape[0]]
@@ -353,23 +371,26 @@ class QueryService:
         size the pairs pass), the live-set counts, and the delta membership
         mask (None when the delta is empty).
         """
-        tab = self._prepare(q, eps, view, stats)
-        if tab is not None:
-            snap_counts = self._run_counts(tab, eps, stats)
-        else:
-            snap_counts = np.zeros(q.shape[0], np.int64)
-        counts = snap_counts.copy()
-        dead_mask = self._aux_mask(
-            q, view.dead_dev, view.tombstone_count, eps, stats
-        )
-        if dead_mask is not None:
-            counts -= dead_mask.sum(axis=1)
-        delta_mask = self._aux_mask(
-            q, view.delta_dev, view.delta_size, eps, stats
-        )
-        if delta_mask is not None:
-            counts += delta_mask.sum(axis=1)
-        return tab, snap_counts, counts, delta_mask
+        with obs.span(
+            "service.eps_round", "service", eps=eps, nq=int(q.shape[0])
+        ):
+            tab = self._prepare(q, eps, view, stats)
+            if tab is not None:
+                snap_counts = self._run_counts(tab, eps, stats)
+            else:
+                snap_counts = np.zeros(q.shape[0], np.int64)
+            counts = snap_counts.copy()
+            dead_mask = self._aux_mask(
+                q, view.dead_dev, view.tombstone_count, eps, stats
+            )
+            if dead_mask is not None:
+                counts -= dead_mask.sum(axis=1)
+            delta_mask = self._aux_mask(
+                q, view.delta_dev, view.delta_size, eps, stats
+            )
+            if delta_mask is not None:
+                counts += delta_mask.sum(axis=1)
+            return tab, snap_counts, counts, delta_mask
 
     def _global_pairs(
         self,
@@ -381,6 +402,20 @@ class QueryService:
         stats: ServiceStats,
     ) -> np.ndarray:
         """Materialized (query row, GLOBAL id) pairs of the live set."""
+        with obs.span("service.epilogue", "service", eps=eps):
+            return self._global_pairs_impl(
+                eps, tab, view, snap_counts, delta_mask, stats
+            )
+
+    def _global_pairs_impl(
+        self,
+        eps: float,
+        tab: Optional[QueryPlanTables],
+        view: IndexView,
+        snap_counts: np.ndarray,
+        delta_mask: Optional[np.ndarray],
+        stats: ServiceStats,
+    ) -> np.ndarray:
         parts = []
         snap_total = int(snap_counts.sum())
         if tab is not None and snap_total:
@@ -403,10 +438,15 @@ class QueryService:
         srt = np.lexsort((pairs[:, 1], pairs[:, 0]))
         return np.ascontiguousarray(pairs[srt])
 
-    def _finish(self, stats: ServiceStats, traces_before: int) -> ServiceStats:
+    def _finish(
+        self, stats: ServiceStats, traces_before: int, kind: str
+    ) -> ServiceStats:
         stats.num_requests = 1
         stats.num_traces = self._trace_count - traces_before
         self.total.accumulate(stats)
+        obs.event("service.unpin", "service", epoch=stats.epoch)
+        obs.mirror_service_stats(stats, kind=kind)
+        obs.request_log(kind, stats)
         return stats
 
     def _eps_cap(self, q: np.ndarray, view: IndexView) -> float:
@@ -433,12 +473,19 @@ class QueryService:
         eps = self.index.config.eps if eps is None else float(eps)
         stats = ServiceStats(num_queries=q.shape[0], eps=eps)
         traces0 = self._trace_count
-        view = self._pin(stats)
-        counts = np.zeros(q.shape[0], np.int64)
-        if q.shape[0]:
-            _, _, counts, _ = self._query_pass(q, eps, view, stats)
-        stats.num_results = int(counts.sum())
-        return RangeCountResult(counts=counts, stats=self._finish(stats, traces0))
+        with obs.span(
+            "service.request", "request",
+            kind="range_count", nq=int(q.shape[0]), eps=eps,
+        ):
+            view = self._pin(stats)
+            counts = np.zeros(q.shape[0], np.int64)
+            if q.shape[0]:
+                _, _, counts, _ = self._query_pass(q, eps, view, stats)
+            stats.num_results = int(counts.sum())
+            return RangeCountResult(
+                counts=counts,
+                stats=self._finish(stats, traces0, "range_count"),
+            )
 
     def range_pairs(
         self, q: np.ndarray, eps: Optional[float] = None
@@ -454,20 +501,25 @@ class QueryService:
         eps = self.index.config.eps if eps is None else float(eps)
         stats = ServiceStats(num_queries=q.shape[0], eps=eps)
         traces0 = self._trace_count
-        view = self._pin(stats)
-        counts = np.zeros(q.shape[0], np.int64)
-        pairs = np.zeros((0, 2), np.int64)
-        if q.shape[0]:
-            tab, snap_counts, counts, delta_mask = self._query_pass(
-                q, eps, view, stats
+        with obs.span(
+            "service.request", "request",
+            kind="range_pairs", nq=int(q.shape[0]), eps=eps,
+        ):
+            view = self._pin(stats)
+            counts = np.zeros(q.shape[0], np.int64)
+            pairs = np.zeros((0, 2), np.int64)
+            if q.shape[0]:
+                tab, snap_counts, counts, delta_mask = self._query_pass(
+                    q, eps, view, stats
+                )
+                pairs = self._global_pairs(
+                    eps, tab, view, snap_counts, delta_mask, stats
+                )
+            stats.num_results = int(counts.sum())
+            return RangePairsResult(
+                pairs=pairs, counts=counts,
+                stats=self._finish(stats, traces0, "range_pairs"),
             )
-            pairs = self._global_pairs(
-                eps, tab, view, snap_counts, delta_mask, stats
-            )
-        stats.num_results = int(counts.sum())
-        return RangePairsResult(
-            pairs=pairs, counts=counts, stats=self._finish(stats, traces0)
-        )
 
     def knn(
         self, q: np.ndarray, k: int, eps0: Optional[float] = None
@@ -489,41 +541,44 @@ class QueryService:
             raise ValueError(f"k must be >= 0, got {k}")
         stats = ServiceStats(num_queries=nq)
         traces0 = self._trace_count
-        view = self._pin(stats)
-        indices = np.full((nq, k), -1, np.int64)
-        distances = np.full((nq, k), np.inf, np.float64)
-        counts = np.zeros(nq, np.int64)
-        if nq == 0 or view.live_count == 0 or k == 0:
+        with obs.span(
+            "service.request", "request", kind="knn", nq=nq, k=k,
+        ):
+            view = self._pin(stats)
+            indices = np.full((nq, k), -1, np.int64)
+            distances = np.full((nq, k), np.inf, np.float64)
+            counts = np.zeros(nq, np.int64)
+            if nq == 0 or view.live_count == 0 or k == 0:
+                return KnnResult(
+                    indices=indices, distances=distances, counts=counts,
+                    stats=self._finish(stats, traces0, "knn"),
+                )
+
+            k_eff = min(k, view.live_count)
+            eps_cap = self._eps_cap(q, view)
+            eps = self.index.config.eps if eps0 is None else float(eps0)
+            if eps <= 0.0:  # an eps==0 index would never grow by doubling
+                eps = eps_cap / 1024.0
+            eps = min(eps, eps_cap)
+            while True:
+                tab, snap_counts, counts, delta_mask = self._query_pass(
+                    q, eps, view, stats
+                )
+                stats.eps_rounds += 1
+                if (counts >= k_eff).all() or eps >= eps_cap:
+                    break
+                eps = min(2.0 * eps, eps_cap)
+            stats.eps = eps
+
+            pairs = self._global_pairs(
+                eps, tab, view, snap_counts, delta_mask, stats
+            )
+            indices, distances = self._topk_from_pairs(q, pairs, k, nq)
+            stats.num_results = int((indices >= 0).sum())
             return KnnResult(
                 indices=indices, distances=distances, counts=counts,
-                stats=self._finish(stats, traces0),
+                stats=self._finish(stats, traces0, "knn"),
             )
-
-        k_eff = min(k, view.live_count)
-        eps_cap = self._eps_cap(q, view)
-        eps = self.index.config.eps if eps0 is None else float(eps0)
-        if eps <= 0.0:  # an eps==0 index would never grow by doubling
-            eps = eps_cap / 1024.0
-        eps = min(eps, eps_cap)
-        while True:
-            tab, snap_counts, counts, delta_mask = self._query_pass(
-                q, eps, view, stats
-            )
-            stats.eps_rounds += 1
-            if (counts >= k_eff).all() or eps >= eps_cap:
-                break
-            eps = min(2.0 * eps, eps_cap)
-        stats.eps = eps
-
-        pairs = self._global_pairs(
-            eps, tab, view, snap_counts, delta_mask, stats
-        )
-        indices, distances = self._topk_from_pairs(q, pairs, k, nq)
-        stats.num_results = int((indices >= 0).sum())
-        return KnnResult(
-            indices=indices, distances=distances, counts=counts,
-            stats=self._finish(stats, traces0),
-        )
 
     def _topk_from_pairs(
         self, q: np.ndarray, pairs: np.ndarray, k: int, nq: int

@@ -1,0 +1,431 @@
+"""Observability layer (DESIGN.md #11): tracer, registry, report, parity.
+
+The load-bearing contracts:
+
+  * disabled tracer records NOTHING and the production paths run untraced
+    (one attribute check -- no spans, no registry writes);
+  * under ``obs.capture()`` the span counts are EXACT mirrors of the
+    engine/service counters: one "dispatch" span per
+    ``num_device_dispatches`` increment, one "trace" instant per
+    ``ServiceStats.num_traces`` increment, and the metrics registry deltas
+    equal the stats objects (filtered by the ``path`` label -- the host
+    ring mirrors at both "engine" and "ring_host", by design);
+  * a capture round-trips through the Chrome-trace exporter and the
+    ``repro.obs.report`` loader; malformed traces fail loudly (the CI gate).
+
+The 8-device matrix runs in a subprocess (the device-count flag must
+precede jax init), mirroring test_fused_pairs.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from oracles import brute_counts, brute_pairs, make_dataset, pair_set
+from repro import obs
+from repro.core import (
+    DistributedSelfJoinEngine,
+    SelfJoinConfig,
+    SelfJoinEngine,
+)
+from repro.join import QueryService, SimilarityIndex
+from repro.obs import report as obs_report
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import _NOOP, _state
+
+
+def _mesh1():
+    import jax
+
+    return jax.make_mesh((1,), ("data",))
+
+
+# -- tracer unit tests -------------------------------------------------------
+
+def test_disabled_tracer_records_zero_events():
+    assert not obs.enabled()
+    with obs.span("work", "test", k=1) as sp:
+        sp.set(extra=2)
+    obs.event("tick", "test")
+    obs.inc("never_total")
+    obs.observe("never_hist", 1.0)
+    obs.set_gauge("never_gauge", 1.0)
+    assert obs.event_count() == 0
+    assert obs.events() == []
+    # the disabled span is the shared no-op singleton: no allocation per call
+    assert obs.span("again") is _NOOP
+    # nothing leaked into the registry
+    assert obs.metric_value(obs.REGISTRY.snapshot(), "never_total") == 0.0
+
+
+def test_disabled_join_runs_untraced(dataset_case):
+    name, data, eps = dataset_case
+    eng = SelfJoinEngine(data, SelfJoinConfig(eps=eps, k=4, tile_size=16))
+    res = eng.pairs()
+    assert obs.event_count() == 0, name
+    assert pair_set(res.pairs) == pair_set(brute_pairs(data, eps)), name
+
+
+def test_ring_buffer_bounds_and_drop_counter():
+    obs.enable(capacity=4)
+    try:
+        for i in range(10):
+            obs.event(f"e{i}", "test")
+        evts = obs.events()
+        assert [e.name for e in evts] == ["e6", "e7", "e8", "e9"]
+        assert obs.dropped_count() == 6
+        assert obs.event_count() == 4
+    finally:
+        obs.disable()
+        obs.clear()
+
+
+def test_span_nesting_depth_and_attrs():
+    with obs.capture() as cap:
+        with obs.span("outer", "test", a=1):
+            with obs.span("inner", "test") as sp:
+                sp.set(b=np.int64(2))  # numpy scalars must serialize
+    outer = cap.spans("outer")[0]
+    inner = cap.spans("inner")[0]
+    assert outer.depth == 0 and inner.depth == 1
+    assert outer.attrs["a"] == 1
+    assert inner.attrs["b"] == 2
+    assert inner.ts_us >= outer.ts_us
+    assert inner.dur_us <= outer.dur_us
+    json.dumps(cap.chrome_trace())  # attrs are JSON-clean
+
+
+def test_capture_restores_prior_state():
+    assert not obs.enabled()
+    with obs.capture() as cap:
+        assert obs.enabled()
+        obs.event("in_cap", "test")
+    assert not obs.enabled()
+    assert obs.event_count() == 0  # capture cleared its buffer
+    assert cap.span_count("in_cap") == 1
+    # a capture inside an enable() window re-opens the window on exit
+    obs.enable()
+    try:
+        obs.event("before", "test")
+        with obs.capture() as inner:
+            obs.event("inside", "test")
+        assert inner.span_count("inside") == 1
+        assert inner.span_count("before") == 0  # fresh buffer per capture
+        assert obs.enabled()
+    finally:
+        obs.disable()
+        obs.clear()
+
+
+def test_capture_exception_still_collects():
+    with pytest.raises(RuntimeError, match="boom"):
+        with obs.capture() as cap:
+            obs.event("pre_fail", "test")
+            raise RuntimeError("boom")
+    assert not obs.enabled()
+    assert cap.span_count("pre_fail") == 1
+
+
+# -- metrics registry --------------------------------------------------------
+
+def test_registry_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests")
+    c.inc(2, kind="a")
+    c.inc(3, kind="b")
+    g = reg.gauge("depth", "queue depth")
+    g.set(5)
+    g.inc(2)
+    g.dec(3)
+    h = reg.histogram("lat", "latency", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert obs.metric_value(snap, "req_total") == 5.0
+    assert obs.metric_value(snap, "req_total", kind="a") == 2.0
+    assert obs.metric_value(snap, "depth") == 4.0
+    hv = snap[("lat", ())]
+    assert hv.count == 3 and hv.sum == 55.5
+    assert hv.bucket_counts == (1, 2, 3)  # cumulative, last is +inf
+    with pytest.raises(TypeError):
+        reg.gauge("req_total")  # kind mismatch on an existing name
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_registry_diff_and_exports():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(1, tier="indexed")
+    reg.gauge("g").set(7)
+    reg.histogram("h").observe(3.0)
+    before = reg.snapshot()
+    reg.counter("c").inc(4, tier="indexed")
+    reg.counter("c").inc(2, tier="dense")  # label set born after the snapshot
+    reg.gauge("g").set(9)
+    reg.histogram("h").observe(5.0)
+    d = reg.diff(before)
+    assert obs.metric_value(d, "c", tier="indexed") == 4.0
+    assert obs.metric_value(d, "c", tier="dense") == 2.0
+    assert obs.metric_value(d, "g") == 9.0  # gauges report current value
+    assert obs.metric_value(d, "h") == 1.0  # histogram delta contributes count
+    txt = reg.to_prometheus_text()
+    assert "# TYPE c counter" in txt
+    assert 'c{tier="indexed"} 5' in txt
+    assert 'h_bucket{le="+Inf"} 2' in txt
+    assert "h_sum 8.0" in txt and "h_count 2" in txt
+    doc = json.loads(reg.to_json())
+    assert {m["name"] for m in doc} == {"c", "g", "h"}
+
+
+# -- chrome trace + report ---------------------------------------------------
+
+def test_chrome_trace_roundtrips_through_report(tmp_path):
+    with obs.capture() as cap:
+        with obs.span("phase.a", "plan", worker=0, round=1):
+            obs.event("tick", "retry")
+    path = str(tmp_path / "trace.json")
+    cap.write_chrome_trace(path)
+    events = obs_report.load_trace(path)
+    rep = obs_report.build_report(events)
+    assert rep["num_spans"] == 1 and rep["num_instants"] == 1
+    assert rep["phases"]["plan"]["phase.a"]["count"] == 1
+    assert rep["workers"]["0"]["count"] == 1
+    assert rep["rounds"]["1"]["count"] == 1
+    text = obs_report.format_report(rep)
+    assert "phase.a" in text and "worker" in text
+    # the CLI entry point agrees, in both output modes
+    assert obs_report.main([path]) == 0
+    assert obs_report.main([path, "--json"]) == 0
+
+
+@pytest.mark.parametrize("doc,msg", [
+    ([{"name": "x"}], "no phase"),
+    ([{"ph": "X", "name": "x", "ts": 0}], "bad dur"),
+    ([{"ph": "X", "ts": 0, "dur": 1}], "no name"),
+    ([{"ph": "i", "name": "x", "ts": "zero"}], "non-numeric ts"),
+    ({"foo": []}, "missing 'traceEvents'"),
+    ("nope", "top level"),
+])
+def test_malformed_trace_fails(tmp_path, doc, msg):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(obs_report.TraceFormatError, match=msg):
+        obs_report.load_trace(path)
+    assert obs_report.main([path]) == 1
+
+
+# -- engine parity matrix ----------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["indexed", "dense"])
+def test_engine_dispatch_span_parity(dataset_case, execution):
+    name, data, eps = dataset_case
+    cfg = SelfJoinConfig(eps=eps, k=4, tile_size=16, execution=execution)
+    eng = SelfJoinEngine(data, cfg)
+    with obs.capture() as cap:
+        cres = eng.count()
+        pres = eng.pairs()
+    expect = (
+        cres.stats.num_device_dispatches + pres.stats.num_device_dispatches
+    )
+    assert cap.span_count(cat="dispatch") == expect, name
+    assert cap.metric("selfjoin_device_dispatches_total", path="engine") == expect
+    assert cap.metric("selfjoin_joins_total", path="engine") == 2
+    assert (
+        cap.metric("selfjoin_results_total", path="engine", mode="pairs")
+        == pres.stats.num_results
+    )
+    np.testing.assert_array_equal(cres.counts, brute_counts(data, eps))
+    assert pair_set(pres.pairs) == pair_set(brute_pairs(data, eps)), name
+
+
+def test_engine_overflow_retry_events():
+    d = make_dataset("clustered", 301, 8, seed=7)
+    eng = SelfJoinEngine(d, SelfJoinConfig(eps=0.25, k=4, tile_size=16))
+    truth = pair_set(brute_pairs(d, 0.25))
+    with obs.capture() as cap:
+        res = eng.pairs(_cap_hint=1)  # undersized buffer: grow-and-retry
+    assert res.stats.overflow_retries >= 1
+    assert cap.span_count(cat="retry") == res.stats.overflow_retries
+    # dispatch spans count launches across ALL attempts, matching the stats
+    assert cap.span_count(cat="dispatch") == res.stats.num_device_dispatches
+    assert (
+        cap.metric("selfjoin_overflow_retries_total", path="engine")
+        == res.stats.overflow_retries
+    )
+    assert pair_set(res.pairs) == truth
+
+
+# -- distributed ring parity -------------------------------------------------
+
+def test_host_ring_round_spans_and_parity():
+    d = make_dataset("exponential", 403, 16, seed=5)
+    de = DistributedSelfJoinEngine(
+        d, SelfJoinConfig(eps=0.06, k=4, tile_size=16), num_workers=4
+    )
+    with obs.capture() as cap:
+        cres = de.count()
+        pres = de.self_join_pairs()
+    expect = (
+        cres.stats.num_device_dispatches + pres.stats.num_device_dispatches
+    )
+    assert cap.span_count(cat="dispatch") == expect
+    assert cap.metric("selfjoin_device_dispatches_total", path="ring_host") == expect
+    # one ring.round span per BSP round, both modes, rounds labelled 0..p-1
+    rounds = cap.spans("ring.round", "ring")
+    assert len(rounds) == 2 * 4
+    assert {e.attrs["round"] for e in rounds} == {0, 1, 2, 3}
+    assert {e.attrs["mode"] for e in rounds} == {"count", "pairs"}
+    np.testing.assert_array_equal(cres.counts, brute_counts(d, 0.06))
+
+
+def test_fused_ring_parity_one_device():
+    d = make_dataset("clustered", 403, 32, seed=22)
+    de = DistributedSelfJoinEngine(
+        d, SelfJoinConfig(eps=0.25, k=4, tile_size=16), mesh=_mesh1(), fused=True
+    )
+    with obs.capture() as cap:
+        cres = de.count()
+        pres = de.self_join_pairs()
+    expect = (
+        cres.stats.num_device_dispatches + pres.stats.num_device_dispatches
+    )
+    assert cap.span_count(cat="dispatch") == expect
+    assert cap.metric("selfjoin_device_dispatches_total", path="ring_fused") == expect
+    # pack happened inside the capture: per-(worker, round) plan spans exist
+    assert cap.span_count("ring.pack", "plan") >= 1
+    assert cap.span_count("ring.pack.plan", "ring") >= 1
+    # fused programs announce their (re)traces as compile events
+    programs = {e.attrs["program"] for e in cap.spans("ring.trace", "compile")}
+    assert programs == {"fused_count", "fused_pairs"}
+    assert pair_set(pres.pairs) == pair_set(brute_pairs(d, 0.25))
+
+
+# -- service stream parity ---------------------------------------------------
+
+def test_service_stream_parity_and_churn_spans():
+    rng = np.random.default_rng(0)
+    pts = make_dataset("uniform", 400, 4, seed=9)
+    idx = SimilarityIndex(pts, SelfJoinConfig(eps=0.1, k=3, tile_size=16))
+    svc = QueryService(idx)
+    q0 = make_dataset("uniform", 16, 4, seed=10)
+    svc.range_count(q0, 0.1)  # warm one bucket outside the capture
+
+    tr0 = svc.total.num_traces
+    dd0 = svc.total.num_device_dispatches
+    rq0 = svc.total.num_requests
+    with obs.capture() as cap:
+        for i in range(100):
+            nq = 8 if i % 3 else 16
+            q = make_dataset("uniform", nq, 4, seed=100 + i)
+            if i % 4 == 0:
+                svc.range_pairs(q, 0.1)
+            elif i % 4 == 1:
+                svc.knn(q[:4], 3)
+            else:
+                svc.range_count(q, 0.1)
+            if i % 25 == 10:
+                idx.insert(rng.random((5, 4), dtype=np.float32))
+            if i % 40 == 30:
+                idx.delete(idx.insert(rng.random((2, 4), dtype=np.float32)))
+    d_tr = svc.total.num_traces - tr0
+    d_dd = svc.total.num_device_dispatches - dd0
+    d_rq = svc.total.num_requests - rq0
+    assert d_rq == 100
+    assert cap.span_count(cat="trace") == d_tr
+    assert cap.span_count(cat="dispatch") == d_dd
+    assert cap.metric("service_traces_total") == d_tr
+    assert cap.metric("service_dispatches_total") == d_dd
+    assert cap.metric("service_requests_total") == 100
+    assert cap.span_count("service.request", "request") == 100
+    assert cap.span_count("service.request", "log") == 100
+    assert cap.span_count("service.pin", "service") == 100
+    assert cap.span_count("service.unpin", "service") == 100
+    # churn instrumentation: inserts/deletes landed as index spans + counters
+    assert cap.span_count("index.insert", "index") == 6
+    assert cap.span_count("index.delete", "index") == 2
+    assert cap.metric("index_inserts_total") == 4 * 5 + 2 * 2
+    assert cap.metric("index_deletes_total") == 2 * 2
+    assert cap.dropped == 0
+    # per-request kinds all mirrored under their own label
+    for kind in ("range_count", "range_pairs", "knn"):
+        assert cap.metric("service_requests_total", kind=kind) > 0
+
+
+def test_index_auto_compact_span():
+    pts = make_dataset("uniform", 64, 3, seed=2)
+    idx = SimilarityIndex(
+        pts, SelfJoinConfig(eps=0.2, k=2, tile_size=16), auto_compact_fraction=0.25
+    )
+    with obs.capture() as cap:
+        idx.insert(make_dataset("uniform", 40, 3, seed=3))  # trips the spill
+    assert idx.auto_compactions >= 1
+    assert cap.span_count("index.auto_compact", "index") == idx.auto_compactions
+    assert cap.span_count("index.prepare_compact", "index") == idx.auto_compactions
+    assert cap.span_count("index.apply_compact", "index") == idx.auto_compactions
+    assert cap.metric("index_auto_compactions_total") == idx.auto_compactions
+    assert cap.metric("index_compactions_total") == idx.auto_compactions
+
+
+# -- 8-device acceptance matrix (subprocess; flag must precede jax init) -----
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    sys.path.insert(0, sys.argv[2])
+    import json
+    import numpy as np, jax
+    from oracles import brute_pairs, make_dataset, pair_set
+    from repro import obs
+    from repro.core import DistributedSelfJoinEngine, SelfJoinConfig
+    from repro.obs import report as obs_report
+
+    mesh = jax.make_mesh((8,), ("data",))
+    d = make_dataset("exponential", 501, 16, seed=21)
+    de = DistributedSelfJoinEngine(
+        d, SelfJoinConfig(eps=0.06, k=4, tile_size=16), mesh=mesh, fused=True
+    )
+    with obs.capture() as cap:
+        res = de.self_join_pairs()
+    assert pair_set(res.pairs) == pair_set(brute_pairs(d, 0.06))
+    # one fused dispatch span per device launch, mirrored to the registry
+    assert cap.span_count(cat="dispatch") == res.stats.num_device_dispatches == 1
+    assert cap.metric(
+        "selfjoin_device_dispatches_total", path="ring_fused"
+    ) == 1
+    # per-(worker, round) pack spans cover the full 8-round ring schedule
+    packs = cap.spans("ring.pack.plan", "ring")
+    rounds = {e.attrs["round"] for e in packs}
+    workers = {e.attrs["worker"] for e in packs}
+    assert rounds == set(range(8)), rounds
+    assert workers == set(range(8)), workers
+    # the capture round-trips through the exporter and the report CLI
+    path = os.path.join(sys.argv[3], "trace8.json")
+    cap.write_chrome_trace(path)
+    rep = obs_report.build_report(obs_report.load_trace(path))
+    assert rep["num_spans"] >= len(packs)
+    assert set(rep["rounds"]) == {str(r) for r in range(8)}
+    assert "dispatch" in rep["phases"]
+    assert obs_report.main([path]) == 0
+    print("OBS_8DEV_OK")
+    """
+)
+
+
+def test_obs_fused_pairs_8_devices(tmp_path):
+    here = os.path.dirname(__file__)
+    src = os.path.join(here, "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src, here, str(tmp_path)],
+        capture_output=True, text=True, timeout=600,
+        env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OBS_8DEV_OK" in out.stdout
